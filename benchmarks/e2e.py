@@ -1,0 +1,95 @@
+"""Shared end-to-end evaluation engine: map every layer of a network onto a
+LEGO design with the mapper (dataflow + tiling search, §VI-A) or onto the
+Gemmini baseline, and accumulate cycles/energy."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import workload as W
+from repro.core.baselines import GEMMINI_HW, gemmini_layer_perf
+from repro.core.mapper import SpatialChoice, best_mapping
+from repro.core.perf_model import HWConfig, layer_perf
+
+from .designs import build_design
+from .nn_workloads import NETWORKS
+
+__all__ = ["run_network_lego", "run_network_gemmini", "NetResult",
+           "LEGO_HW", "lego_data_nodes"]
+
+LEGO_HW = HWConfig(n_fus=256, buffer_bytes=256 * 1024, dram_gbps=16.0,
+                   n_ppus=8)
+
+GEMM_SP = [SpatialChoice(("k", "j"), (1, 1), "jk"),
+           SpatialChoice(("i", "j"), (1, 1), "ij")]
+CONV_SP = [SpatialChoice(("ow", "oh"), (0, 0), "ohow"),
+           SpatialChoice(("ic", "oc"), (1, 1), "icoc")]
+DW_SP = [SpatialChoice(("ow", "oh"), (0, 0), "ohow")]
+
+_WL = {"conv": W.conv2d(), "dwconv": W.depthwise_conv2d(), "gemm": W.gemm()}
+_SP = {"conv": CONV_SP, "dwconv": DW_SP, "gemm": GEMM_SP}
+
+
+@dataclass
+class NetResult:
+    name: str
+    cycles: float
+    energy_pj: float
+    macs: float
+    ppu_cycles: float
+
+    @property
+    def gops(self) -> float:
+        return 2.0 * self.macs / max(1.0, self.cycles)
+
+    @property
+    def gops_per_w(self) -> float:
+        # energy_pj / cycles(ns) = power in mW; GOP/s / W
+        mw = self.energy_pj / max(1.0, self.cycles)
+        return self.gops / (mw / 1e3)
+
+    @property
+    def utilization(self) -> float:
+        return 2.0 * self.macs / (2.0 * 256 * max(1.0, self.cycles))
+
+
+def lego_data_nodes(design_name: str = "Conv2d-MNICOC") -> dict[str, int]:
+    """Bank-port pressure per tensor = data nodes of the *active* dataflow
+    (only one dataflow runs at a time; the union across dataflows would
+    double-charge the fused design's scratchpad energy)."""
+    adg = build_design(design_name)
+    out = {}
+    for t, plan in adg.tensor_plans.items():
+        per_df = [len(v) for v in plan.data_nodes.values() if v]
+        out[t] = max(1, min(per_df) if per_df else len(plan.all_data_nodes))
+    return out
+
+
+def run_network_lego(net: str, hw: HWConfig = LEGO_HW,
+                     restrict: str | None = None) -> NetResult:
+    """restrict: force a single spatial dataflow name (Table V ablation)."""
+    layers = NETWORKS[net]()
+    dn = lego_data_nodes()
+    cyc = en = macs = ppu = 0.0
+    for kind, dims, rep, nt in layers:
+        sps = _SP[kind]
+        if restrict:
+            sps = [s for s in sps if s.name == restrict] or sps
+        m = best_mapping(_WL[kind], dims, sps, hw,
+                         data_nodes_per_tensor=dn, ppu_elements=nt)
+        cyc += rep * m.perf.cycles
+        en += rep * m.perf.energy_pj
+        macs += rep * m.perf.macs
+        ppu += rep * m.perf.ppu_cycles
+    return NetResult(net, cyc, en, macs, ppu)
+
+
+def run_network_gemmini(net: str) -> NetResult:
+    layers = NETWORKS[net]()
+    cyc = en = macs = 0.0
+    for kind, dims, rep, nt in layers:
+        p = gemmini_layer_perf(kind, dims, ppu_elements=nt)
+        cyc += rep * p.cycles
+        en += rep * p.energy_pj
+        macs += rep * p.macs
+    return NetResult(net, cyc, en, macs, 0.0)

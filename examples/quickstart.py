@@ -1,0 +1,70 @@
+"""Quickstart: generate a spatial accelerator with LEGO and validate it.
+
+Mirrors the paper's Fig. 1 flow end-to-end in under a minute on CPU:
+
+  1. describe the workload (GEMM) and two spatial dataflows (the paper's
+     switchable GEMM-MJ design: TPU-style K-J systolic + output-stationary
+     I-J) as affine relations;
+  2. front end: solve the reuse equations, span, fuse, bank;
+  3. back end: lower to the primitive DAG and run the LP/ILP passes;
+  4. report area/power;
+  5. execute BOTH dataflows cycle-by-cycle on the generated architecture and
+     check bit-exactness against the loop-nest oracle.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import workload as W
+from repro.core.adg import generate_adg
+from repro.core.cost import dag_area_um2, dag_power_mw
+from repro.core.dag import codegen
+from repro.core.dataflow import build_dataflow
+from repro.core.funcsim import oracle, simulate
+from repro.core.passes import run_backend
+
+
+def main():
+    wl = W.gemm()
+    df_jk = build_dataflow(wl, spatial=[("k", 8), ("j", 8)],
+                           temporal=[("i", 4), ("j", 2), ("k", 2), ("i", 4)],
+                           c=(1, 1), name="gemm-jk")
+    df_ij = build_dataflow(wl, spatial=[("i", 8), ("j", 8)],
+                           temporal=[("i", 2), ("j", 2), ("k", 16)],
+                           c=(1, 1), name="gemm-ij")
+
+    print("== front end: interconnect + banking ==")
+    adg = generate_adg([(wl, df_jk), (wl, df_ij)], name="gemm-mj")
+    for k, v in adg.summary().items():
+        print(f"  {k}: {v}")
+
+    print("== back end: LP/ILP optimization ==")
+    base = codegen(adg)
+    run_backend(base, optimize=False)
+    opt = codegen(adg)
+    report = run_backend(opt, optimize=True)
+    a0, a1 = dag_area_um2(base).total_um2, dag_area_um2(opt).total_um2
+    p0 = dag_power_mw(base).total_mw
+    p1 = dag_power_mw(opt, active_df="gemm-jk").total_mw
+    print(f"  area  : {a0/1e3:.0f} -> {a1/1e3:.0f} kum2  ({a0/a1:.2f}x)")
+    print(f"  power : {p0:.1f} -> {p1:.1f} mW  ({p0/p1:.2f}x)")
+    print(f"  passes: {list(report)}")
+
+    print("== functional validation on the generated architecture ==")
+    rng = np.random.default_rng(0)
+    sizes = df_jk.sizes()
+    X = rng.integers(-4, 5, (sizes["i"], sizes["k"])).astype(np.float64)
+    Wm = rng.integers(-4, 5, (sizes["k"], sizes["j"])).astype(np.float64)
+    ref = oracle(wl, sizes, {"X": X, "W": Wm})
+    for df in (df_jk, df_ij):
+        res = simulate(adg, df.name, {"X": X, "W": Wm})
+        ok = np.array_equal(res.output, ref)
+        print(f"  {df.name}: exact={ok}  cycles={res.cycles} "
+              f"mem_reads={res.mem_reads}")
+        assert ok
+    print("OK: one architecture, two dataflows, bit-exact.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Batched serving example: prefill + decode with KV caches / SSM states.
+
+Serves a reduced hybrid (Jamba-family) model — attention KV caches, Mamba
+conv/ssm states and MoE routing all exercised through the decode path.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --batch 4 --new 24
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.serve.engine import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="jamba_1_5_large_398b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    from repro.models import transformer as TF
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    out = generate(params, cfg, prompts, max_new=args.new)
+    dt = time.time() - t0
+    toks = args.batch * args.new
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.new}")
+    print(f"generated {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s on CPU ref path)")
+    print("sample token ids:", out[0, -args.new:].tolist()[:12], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,340 @@
+"""Detailed Architecture Graph — the primitive-level IR of the back end
+(paper Fig. 7(b)) and the ADG→DAG translation pass (codegen).
+
+DAG nodes are hardware primitives (multipliers, adders, muxes, registers,
+FIFOs, address generators, memory ports, reducers); edges carry bit-widths
+and accumulate the pipeline registers inserted by delay matching (``el``).
+FU boundaries are dissolved: an FU's multiplier and its neighbor's adder are
+just nodes, which is what lets the LP/ILP passes optimize the array as a
+whole instead of per-template (§V).
+
+Latency model: combinational primitives (mux, wire) have ``latency = 0``;
+arithmetic primitives are pipelined with ``latency = 1``; skew registers
+carry their skew; FIFOs are *elastic* (runtime-programmable depth) and are
+therefore excluded from the delay-matching constraint system.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .adg import ADG
+
+__all__ = ["DAGNode", "DAGEdge", "DAG", "codegen"]
+
+# primitive -> (latency_cycles, is_elastic)
+PRIM_LATENCY = {
+    "input": 0, "output": 0, "const": 0, "wire": 0, "mux": 0,
+    "mul": 1, "add": 1, "acc": 1, "shift": 0, "lut": 1,
+    "reg": None,  # latency = meta["depth"]
+    "fifo": 0,  # elastic
+    "addrgen": 1, "counter": 1, "memport": 1, "reduce": None,  # ceil(log2(fan))
+}
+
+
+@dataclass
+class DAGNode:
+    id: int
+    kind: str
+    bits: int = 16
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def latency(self) -> int:
+        if self.kind == "reg":
+            return int(self.meta.get("depth", 1))
+        if self.kind == "reduce":
+            fan = max(2, int(self.meta.get("fan", 2)))
+            return int(np.ceil(np.log2(fan)))
+        lat = PRIM_LATENCY.get(self.kind, 0)
+        return int(lat or 0)
+
+    @property
+    def elastic(self) -> bool:
+        return self.kind == "fifo"
+
+
+@dataclass
+class DAGEdge:
+    src: int
+    dst: int
+    bits: int = 16
+    el: int = 0  # pipeline registers inserted by delay matching
+    meta: dict = field(default_factory=dict)
+
+
+class DAG:
+    def __init__(self, name: str = "dag"):
+        self.name = name
+        self.nodes: dict[int, DAGNode] = {}
+        self.edges: list[DAGEdge] = []
+        self._next = 0
+        # per-dataflow usage: node id -> set of dataflow names using it
+        self.users: dict[int, set[str]] = {}
+        self.dataflows: list[str] = []
+
+    # -- construction ------------------------------------------------------
+    def add(self, kind: str, bits: int = 16, users=None, **meta) -> int:
+        nid = self._next
+        self._next += 1
+        self.nodes[nid] = DAGNode(nid, kind, bits, dict(meta))
+        self.users[nid] = set(users) if users else set(self.dataflows)
+        return nid
+
+    def wire(self, src: int, dst: int, bits: int | None = None, **meta) -> DAGEdge:
+        if bits is None:
+            bits = self.nodes[src].bits
+        e = DAGEdge(src, dst, bits, 0, dict(meta))
+        self.edges.append(e)
+        return e
+
+    # -- queries -----------------------------------------------------------
+    def in_edges(self, nid: int) -> list[DAGEdge]:
+        return [e for e in self.edges if e.dst == nid]
+
+    def out_edges(self, nid: int) -> list[DAGEdge]:
+        return [e for e in self.edges if e.src == nid]
+
+    def count(self, kind: str) -> int:
+        return sum(1 for n in self.nodes.values() if n.kind == kind)
+
+    def pipeline_register_bits(self) -> int:
+        """Total bits of delay-matching registers (Σ EL·W) — the quantity the
+        back-end LP minimizes (paper Eq. 11)."""
+        return sum(e.el * e.bits for e in self.edges)
+
+    def register_bits(self) -> int:
+        """All register bits: pipeline + skew regs + accumulators."""
+        bits = self.pipeline_register_bits()
+        for n in self.nodes.values():
+            if n.kind == "reg":
+                bits += n.bits * max(1, n.meta.get("depth", 1))
+            elif n.kind == "acc":
+                bits += n.bits
+        return bits
+
+    def fifo_bits(self) -> int:
+        return sum(n.bits * max(1, n.meta.get("depth", 1))
+                   for n in self.nodes.values() if n.kind == "fifo")
+
+    def toposort(self) -> list[int]:
+        indeg = {nid: 0 for nid in self.nodes}
+        for e in self.edges:
+            if not self.nodes[e.src].elastic:
+                indeg[e.dst] += 1
+        from collections import deque
+        q = deque(nid for nid, d in indeg.items() if d == 0)
+        order = []
+        while q:
+            u = q.popleft()
+            order.append(u)
+            for e in self.out_edges(u):
+                if self.nodes[u].elastic:
+                    continue
+                indeg[e.dst] -= 1
+                if indeg[e.dst] == 0:
+                    q.append(e.dst)
+        if len(order) != len(self.nodes):
+            # cycles must pass through elastic nodes; report remaining anyway
+            rest = [nid for nid in self.nodes if nid not in order]
+            order.extend(rest)
+        return order
+
+    def stats(self) -> dict:
+        from collections import Counter
+        c = Counter(n.kind for n in self.nodes.values())
+        return {
+            **dict(c),
+            "edges": len(self.edges),
+            "pipeline_reg_bits": self.pipeline_register_bits(),
+            "register_bits": self.register_bits(),
+            "fifo_bits": self.fifo_bits(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# codegen: ADG → DAG (paper §V, translation pass)
+# ---------------------------------------------------------------------------
+
+def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
+    """Open the FU black boxes (Fig. 7): expand every FU into its compute
+    primitives, every physical link into wires/skew-regs/FIFOs, every
+    multi-source operand into a mux, and instantiate the single shared
+    control/address generators whose signals propagate per the control-flow
+    vector ``c`` (§III-D — this is what removes per-FU address logic).
+    """
+    dag = DAG(adg.name)
+    dag.dataflows = list(adg.dataflow_names)
+    n_fus = adg.n_fus
+
+    compute = {s.dataflow.name: s.workload.compute for s in adg.specs}
+    any_mac2 = any(v == "mac2" for v in compute.values())
+
+    # -- operand source nodes per (tensor, fu) ------------------------------
+    # in_port[(tensor, fu)] = node id delivering that operand to the FU
+    in_port: dict[tuple[str, int], int] = {}
+    out_sink: dict[tuple[str, int], int] = {}
+
+    input_tensors: list[str] = []
+    output_tensor: dict[str, str] = {}
+    for s in adg.specs:
+        for t in s.workload.inputs:
+            if t.name not in input_tensors:
+                input_tensors.append(t.name)
+        output_tensor[s.dataflow.name] = s.workload.output.name
+
+    # memory ports: one read port per data node per tensor (fed by the data
+    # distribution switch from the banks; the switch cost is modeled in cost.py)
+    for tensor, plan in adg.tensor_plans.items():
+        is_out = tensor in output_tensor.values()
+        bits = acc_bits if is_out else data_bits
+        # sources entering each FU for this operand
+        srcs: dict[int, list[tuple[int, str, int, set]]] = {f: [] for f in range(n_fus)}
+
+        if not is_out:
+            for dfn, dns in plan.data_nodes.items():
+                for f in dns:
+                    mp = dag.add("memport", bits, users={dfn}, tensor=tensor,
+                                 fu=f, direction="read")
+                    srcs[f].append((mp, "mem", 0, {dfn}))
+
+        for (u, v), link in plan.links.items():
+            users = set(link.users)
+            depths = link.users
+            if link.kind == "direct" or link.kind == "direct+delay":
+                skew = max((d for k, d in depths.items() if "#" not in k),
+                           default=0)
+                srcs[v].append((("fu_out", u), "link", skew, users))
+            if "delay" in link.kind:
+                depth = max(depths.values())
+                srcs[v].append((("fu_out", u), "fifo", depth, users))
+
+        plan.meta_srcs = srcs  # type: ignore[attr-defined]
+        if is_out:
+            # output write ports for data nodes
+            pass
+
+    # -- FU compute primitives ----------------------------------------------
+    fu_out: dict[tuple[str, int], int] = {}  # (tensor, fu) -> producing node
+    fu_mul: dict[int, int] = {}
+    fu_add: dict[int, int] = {}
+
+    # first create all compute nodes so links can reference fu outputs
+    for f in range(n_fus):
+        mul = dag.add("mul", 2 * data_bits, fu=f)
+        fu_mul[f] = mul
+        if any_mac2:
+            mul2 = dag.add("mul", 2 * data_bits, fu=f, stage=2)
+            dag.wire(mul, mul2)
+            fu_mul[f] = mul2
+        add = dag.add("add", acc_bits, fu=f)
+        dag.wire(fu_mul[f], add, bits=2 * data_bits)
+        fu_add[f] = add
+
+    # resolve operand sources into muxes / wires / fifos
+    for tensor, plan in adg.tensor_plans.items():
+        is_out = tensor in output_tensor.values()
+        bits = acc_bits if is_out else data_bits
+        srcs = plan.meta_srcs  # type: ignore[attr-defined]
+        for f in range(n_fus):
+            entries = srcs.get(f, [])
+            resolved: list[int] = []
+            for src, kind, depth, users in entries:
+                nid = src if isinstance(src, int) else (
+                    fu_add[src[1]] if is_out else None)
+                if nid is None:
+                    # input tensor forwarded from another FU's operand register
+                    nid = in_port.get((tensor, src[1]))
+                    if nid is None:
+                        # operand path not yet built; use a placeholder wire
+                        nid = dag.add("wire", bits, users=users, tensor=tensor,
+                                      fu=src[1], forward=True)
+                        in_port[(tensor, src[1])] = nid
+                if kind == "fifo":
+                    fifo = dag.add("fifo", bits, users=users, depth=depth,
+                                   tensor=tensor)
+                    dag.wire(nid, fifo, bits=bits)
+                    nid = fifo
+                elif kind == "link" and depth > 0:
+                    reg = dag.add("reg", bits, users=users, depth=depth,
+                                  tensor=tensor, skew=True)
+                    dag.wire(nid, reg, bits=bits)
+                    nid = reg
+                resolved.append(nid)
+
+            if not resolved:
+                continue
+            if len(resolved) > 1:
+                mux = dag.add("mux", bits, tensor=tensor, fu=f,
+                              ways=len(resolved))
+                for r in resolved:
+                    dag.wire(r, mux, bits=bits)
+                port = mux
+            else:
+                port = resolved[0]
+
+            if (tensor, f) in in_port:
+                # back-patch placeholder forward wires
+                ph = in_port[(tensor, f)]
+                if dag.nodes[ph].meta.get("forward"):
+                    dag.wire(port, ph, bits=bits)
+                    port = ph
+            in_port[(tensor, f)] = port
+
+    # wire operands into compute
+    for f in range(n_fus):
+        ins = [t for t in input_tensors if (t, f) in in_port]
+        # first two inputs feed the multiplier; third (mac2) feeds stage-2 mul
+        for t in ins[:2]:
+            dag.wire(in_port[(t, f)], fu_mul[f] if not any_mac2
+                     else dag.in_edges(fu_mul[f])[0].src, bits=data_bits)
+        if any_mac2 and len(ins) > 2:
+            dag.wire(in_port[(ins[2], f)], fu_mul[f], bits=data_bits)
+
+        # output reduction / accumulation
+        for dfn in adg.dataflow_names:
+            ot = output_tensor[dfn]
+            if (ot, f) in in_port:
+                dag.wire(in_port[(ot, f)], fu_add[f], bits=acc_bits)
+
+        # stationary accumulator (e.g. Y revisit): acc register on the adder
+        needs_acc = any(
+            r.depth >= 1 for dfn in adg.dataflow_names
+            for r in adg.stationary.get((dfn, output_tensor[dfn]), []))
+        if needs_acc:
+            acc = dag.add("acc", acc_bits, fu=f)
+            dag.wire(fu_add[f], acc)
+            fu_out_node = acc
+        else:
+            fu_out_node = fu_add[f]
+        for dfn in adg.dataflow_names:
+            fu_out[(output_tensor[dfn], f)] = fu_out_node
+
+    # output write ports: data nodes of the output tensor commit to memory
+    for dfn in adg.dataflow_names:
+        ot = output_tensor[dfn]
+        plan = adg.tensor_plans[ot]
+        for f in plan.data_nodes.get(dfn, []):
+            wp = dag.add("memport", acc_bits, users={dfn}, tensor=ot, fu=f,
+                         direction="write")
+            dag.wire(fu_out[(ot, f)], wp, bits=acc_bits)
+
+    # -- shared control: counters + address generators ----------------------
+    ctrl = dag.add("counter", 16, role="timestamp")
+    for (dfn, tensor), gens in adg.addr_gens.items():
+        if not gens:
+            continue
+        ag = dag.add("addrgen", 20, users={dfn}, tensor=tensor,
+                     n_nodes=len(gens))
+        dag.wire(ctrl, ag, bits=16)
+        # distribute address to that tensor's memports (broadcast — rewired
+        # into a forwarding chain by the backend pass when c != 0)
+        for n in dag.nodes.values():
+            if (n.kind == "memport" and n.meta.get("tensor") == tensor
+                    and dfn in dag.users[n.id]):
+                dag.wire(ag, n.id, bits=20)
+
+    return dag

@@ -1,0 +1,201 @@
+"""Cycle-accurate functional simulation of a generated architecture.
+
+This replaces the paper's RTL simulation: it executes an ADG dataflow cycle
+by cycle, where **input operands may only arrive through the generated
+physical links (skew registers / FIFOs with the generated depths) or through
+a data node's shared address generator**.  If the front end derived a wrong
+interconnection or FIFO depth, the steady-state operand values are wrong and
+the result diverges from the oracle.
+
+Semantics:
+  * each FU ``s`` executes local timestep ``t`` (wall time ``t + s·c``);
+  * a link ``u→f`` created from reuse ``(Δs, Δt)`` delivers ``u``'s operand
+    of local time ``t − scalar(Δt)``; the value is *valid* only when the
+    vector ``t_vec − Δt`` stays inside the canonical loop box (mixed-radix
+    carries invalidate the shift — exactly the data valid/invalid control
+    signal of §III-C).  Invalid cycles are *boundary fills*: served through
+    the data-distribution switch and counted in ``fills`` (the performance
+    model charges them as memory traffic);
+  * output elements are committed by scatter-accumulation over the FU
+    products; psum *routing* is checked structurally instead (every FU must
+    reach an output data node through generated output links) — input-path
+    routing is where dataflow bugs live, and it is simulated exactly.
+
+Returns the output tensor plus traffic counters used by the perf model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .adg import ADG
+from .affine import mixed_radix_vector
+from .workload import Workload
+
+__all__ = ["oracle", "simulate", "SimResult"]
+
+
+def oracle(wl: Workload, sizes: dict[str, int],
+           inputs: dict[str, np.ndarray]) -> np.ndarray:
+    """Reference semantics: full loop-nest evaluation (vectorized numpy)."""
+    dims = wl.iter_dims
+    grids = np.meshgrid(*[np.arange(sizes[d]) for d in dims], indexing="ij")
+    pts = np.stack([g.reshape(-1) for g in grids], axis=-1)  # (N, n_iter)
+
+    vals = None
+    for t in wl.inputs:
+        d = t.fmap(pts)  # (N, n_D)
+        v = inputs[t.name][tuple(d[:, i] for i in range(d.shape[1]))]
+        vals = v if vals is None else vals * v
+
+    out_t = wl.output
+    d_out = out_t.fmap(pts)
+    out_shape = wl.tensor_shape(out_t, sizes)
+    out = np.zeros(out_shape, dtype=np.float64)
+    np.add.at(out, tuple(d_out[:, i] for i in range(d_out.shape[1])), vals)
+    return out
+
+
+@dataclass
+class SimResult:
+    output: np.ndarray
+    fills: dict[str, int]          # boundary fills per tensor (switch traffic)
+    mem_reads: dict[str, int]      # data-node reads per tensor
+    link_transfers: dict[str, int]
+    cycles: int
+
+
+def simulate(adg: ADG, df_name: str, inputs: dict[str, np.ndarray]) -> SimResult:
+    spec = adg.spec(df_name)
+    wl, df = spec.workload, spec.dataflow
+    sizes = df.sizes()
+    T = df.total_cycles
+    n = df.n_fus
+    coords = df.fu_coords()
+    R_T = df.R_T
+
+    # --- structural check: every FU reaches an output data node -----------
+    out_name = wl.output.name
+    oplan = adg.tensor_plans[out_name]
+    sinks = set(oplan.data_nodes.get(df_name, []))
+    feeds: dict[int, list[int]] = {}
+    for (u, v), link in oplan.links.items():
+        if any(k.split("#")[0] == df_name for k in link.users):
+            feeds.setdefault(u, []).append(v)
+    reached = set(sinks)
+    changed = True
+    while changed:
+        changed = False
+        for u, vs in feeds.items():
+            if u not in reached and any(v in reached for v in vs):
+                reached.add(u)
+                changed = True
+    missing = set(range(n)) - reached
+    assert not missing, (
+        f"{out_name}: FUs {sorted(missing)[:8]} cannot commit under {df_name}")
+
+    # --- input feeders -----------------------------------------------------
+    # feeder[tensor][f] = ("mem", None) | ("link", (src_fu, dt_vec))
+    feeders: dict[str, list] = {}
+    fills = {t.name: 0 for t in wl.inputs}
+    mem_reads = {t.name: 0 for t in wl.inputs}
+    link_transfers = {t.name: 0 for t in wl.inputs}
+
+    reuse_by_ds: dict[str, dict[tuple, np.ndarray]] = {}
+    for t in wl.inputs:
+        sol = adg.solutions[(df_name, t.name)]
+        table = {}
+        for r in sol.reuses:
+            if r.is_spatial:
+                key = tuple(r.ds)
+                if key not in table or r.depth < table[key][1]:
+                    table[key] = (np.array(r.dt), r.depth)
+        reuse_by_ds[t.name] = table
+
+    for t in wl.inputs:
+        plan = adg.tensor_plans[t.name]
+        dns = set(plan.data_nodes.get(df_name, []))
+        fl = [None] * n
+        for f in dns:
+            fl[f] = ("mem", None)
+        for (u, v), link in plan.links.items():
+            if not any(k.split("#")[0] == df_name for k in link.users):
+                continue
+            if fl[v] is not None:
+                continue
+            ds = tuple((coords[v] - coords[u]).tolist())
+            ent = reuse_by_ds[t.name].get(ds)
+            if ent is None:
+                continue
+            fl[v] = ("link", (u, ent[0]))
+        for f in range(n):
+            if fl[f] is None:
+                # isolated FU without feed: served by the switch every cycle
+                fl[f] = ("switch", None)
+        feeders[t.name] = fl
+
+    # --- cycle loop ----------------------------------------------------------
+    hist: dict[str, np.ndarray] = {
+        t.name: np.zeros((T, n), dtype=np.float64) for t in wl.inputs}
+    out_shape = wl.tensor_shape(wl.output, sizes)
+    out = np.zeros(out_shape, dtype=np.float64)
+
+    fmaps = {t.name: t.fmap for t in wl.inputs}
+    ofmap = wl.output.fmap
+
+    # resolution order: memory/data-node FUs first, then link-fed in BFS rank
+    order: dict[str, list[int]] = {}
+    for t in wl.inputs:
+        fl = feeders[t.name]
+        rank = {f: 0 for f in range(n) if fl[f][0] != "link"}
+        frontier = list(rank)
+        while frontier:
+            nxt = []
+            for f in range(n):
+                if f in rank or fl[f][0] != "link":
+                    continue
+                u, _ = fl[f][1]
+                if u in rank:
+                    rank[f] = rank[u] + 1
+                    nxt.append(f)
+            if not nxt:
+                break
+            frontier = nxt
+        order[t.name] = sorted(range(n), key=lambda f: rank.get(f, 0))
+
+    for t_flat in range(T):
+        t_vec = mixed_radix_vector(t_flat, R_T)
+        i_base = df.M_TI @ t_vec
+        for tn in fmaps:
+            fl = feeders[tn]
+            arr = inputs[tn]
+            h = hist[tn]
+            for f in order[tn]:
+                kind, info = fl[f]
+                if kind == "link":
+                    u, dt_vec = info
+                    t_src_vec = t_vec - dt_vec
+                    if np.all((t_src_vec >= 0) & (t_src_vec < R_T)):
+                        src_flat = t_flat - df.t_scalar(dt_vec)
+                        h[t_flat, f] = h[src_flat, u]
+                        link_transfers[tn] += 1
+                        continue
+                    fills[tn] += 1  # boundary fill through the switch
+                elif kind == "mem":
+                    mem_reads[tn] += 1
+                else:
+                    fills[tn] += 1
+                d = fmaps[tn](i_base + df.M_SI @ coords[f])
+                h[t_flat, f] = arr[tuple(d.tolist())]
+
+        # products + commit
+        prod = np.ones(n, dtype=np.float64)
+        for tn in fmaps:
+            prod = prod * hist[tn][t_flat]
+        d_out = ofmap(i_base[None, :] + (df.M_SI @ coords.T).T)
+        np.add.at(out, tuple(d_out[:, i] for i in range(d_out.shape[1])), prod)
+
+    return SimResult(out, fills, mem_reads, link_transfers, T + int(np.max(
+        coords @ df.c)) if n else T)

@@ -1,0 +1,139 @@
+"""Mapping search (paper §VI-A: "a simple mapping search tool that identifies
+the best mapping (i.e., dataflow and tiling) for every neural network layer
+based on the simulated #cycles and energy").
+
+Given a layer (workload + true dims) and the spatial dataflows a design
+supports, the mapper pads dims to tileable sizes, enumerates spatial-array
+factorizations, tile splits and a set of canonical loop orders, evaluates
+each with the perf model, and returns the best mapping (min cycles, energy
+as tie-break).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+import numpy as np
+
+from .dataflow import Dataflow, build_dataflow
+from .perf_model import HWConfig, LayerPerf, layer_perf
+from .workload import Workload
+
+__all__ = ["SpatialChoice", "Mapping", "best_mapping", "factor_pairs"]
+
+
+@dataclass(frozen=True)
+class SpatialChoice:
+    """One supported spatial dataflow: the parallel dims and control flow."""
+
+    dims: tuple[str, ...]
+    c: tuple[int, ...]
+    name: str
+
+
+@dataclass
+class Mapping:
+    dataflow: Dataflow
+    perf: LayerPerf
+    spatial: SpatialChoice
+
+
+def factor_pairs(n: int, max_ratio: int = 16) -> list[tuple[int, int]]:
+    out = []
+    for a in range(1, int(np.sqrt(n)) + 1):
+        if n % a == 0:
+            b = n // a
+            if max(a, b) / min(a, b) <= max_ratio:
+                out.append((a, b))
+                if a != b:
+                    out.append((b, a))
+    return out or [(1, n), (n, 1)]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _tile_candidates(r: int) -> list[int]:
+    """Candidate inner-tile sizes for a loop of trip count r."""
+    cands = {1, r}
+    for t in (2, 4, 8, 16, 32, 64):
+        if t < r:
+            cands.add(t)
+    return sorted(cands)
+
+
+def _orders(dims: list[str], wl: Workload, max_orders: int = 8) -> list[list[str]]:
+    """Canonical temporal loop orders: reduction dims innermost (streaming
+    weights / accumulating in place) and output dims innermost variants."""
+    out_dims = {wl.iter_dims[i]
+                for i in np.nonzero(wl.output.fmap.M.any(axis=0))[0]}
+    red = [d for d in dims if d not in out_dims]
+    nonred = [d for d in dims if d in out_dims]
+    orders = []
+    orders.append(nonred + red)          # reductions innermost
+    orders.append(red + nonred)          # outputs innermost (output reuse)
+    if len(nonred) > 1:
+        orders.append(nonred[::-1] + red)
+    if len(red) > 1:
+        orders.append(nonred + red[::-1])
+    # a couple of interleaved orders
+    if red and nonred:
+        orders.append([nonred[0]] + red + nonred[1:])
+    dedup = []
+    for o in orders:
+        if o not in dedup:
+            dedup.append(o)
+    return dedup[:max_orders]
+
+
+def best_mapping(
+    wl: Workload,
+    dims: dict[str, int],
+    spatials: list[SpatialChoice],
+    hw: HWConfig,
+    data_nodes_per_tensor: dict[str, int] | None = None,
+    ppu_elements: float = 0.0,
+    objective: str = "cycles",  # "cycles" | "energy" | "edp"
+) -> Mapping:
+    best: Mapping | None = None
+    for sp in spatials:
+        for facs in factor_pairs(hw.n_fus):
+            if len(sp.dims) != len(facs):
+                if len(sp.dims) == 1:
+                    facs = (hw.n_fus,)
+                else:
+                    continue
+            # pad dims so spatial tiles divide
+            pad = dict(dims)
+            ok = True
+            for d, P in zip(sp.dims, facs):
+                if d not in pad:
+                    ok = False
+                    break
+                pad[d] = _ceil_to(pad[d], P)
+            if not ok:
+                continue
+            trips = {d: pad[d] for d in pad}
+            for d, P in zip(sp.dims, facs):
+                trips[d] //= P
+            t_dims = [d for d in wl.iter_dims if trips.get(d, 1) >= 1]
+            for order in _orders(t_dims, wl):
+                temporal = [(d, trips[d]) for d in order if trips[d] > 1]
+                df = build_dataflow(
+                    wl, spatial=list(zip(sp.dims, facs)),
+                    temporal=temporal, c=sp.c,
+                    name=f"{sp.name}-{'x'.join(map(str, facs))}")
+                perf = layer_perf(wl, df, hw, true_sizes=dims,
+                                  data_nodes_per_tensor=data_nodes_per_tensor,
+                                  ppu_elements=ppu_elements)
+                key = {"cycles": (perf.cycles, perf.energy_pj),
+                       "energy": (perf.energy_pj, perf.cycles),
+                       "edp": (perf.cycles * perf.energy_pj,)}[objective]
+                if best is None or key < best._key:  # type: ignore[attr-defined]
+                    m = Mapping(df, perf, sp)
+                    m._key = key  # type: ignore[attr-defined]
+                    best = m
+    assert best is not None, "no feasible mapping"
+    return best

@@ -1,0 +1,178 @@
+"""Fast performance/energy model for the FU array + memory system.
+
+This is the paper's front-end "performance simulator ... to fast predict the
+latency of computation and memory movement" (§VI-A), used both to drive the
+mapping search and to produce the end-to-end numbers of Fig. 11 / Table II.
+
+Latency: ``cycles = max(compute_cycles, dram_bytes / bytes_per_cycle)`` with
+spatial under-utilization from tile rounding and a pipeline fill term.
+
+DRAM traffic per tensor follows the standard tiled-reuse argument: find the
+outermost loop level whose working set fits the tensor's buffer share; all
+loops outside that level replay the footprint.  Output tensors that spill
+partial sums across an outer reduction loop pay read+write.
+
+SRAM traffic comes from the ADG structure: only *data nodes* read the banks
+each cycle — FU-to-FU links deliver everything else (this is where LEGO's
+interconnection generation beats edge-fed arrays on scratchpad power,
+Table III).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cost import DRAM_PJ_PER_BYTE, sram_read_pj_per_byte
+from .dataflow import Dataflow
+from .workload import Workload
+
+__all__ = ["HWConfig", "LayerPerf", "footprint", "dram_traffic", "layer_perf"]
+
+
+@dataclass(frozen=True)
+class HWConfig:
+    n_fus: int = 256
+    buffer_bytes: int = 256 * 1024
+    dram_gbps: float = 16.0
+    freq_ghz: float = 1.0
+    n_ppus: int = 8
+    data_bytes: int = 1          # int8 datapath (paper evaluation)
+    acc_bytes: int = 4
+    e_mac_pj: float = 0.28       # full MAC incl. local pipeline
+    e_reg_pj_per_byte: float = 0.024
+    e_ppu_pj: float = 1.1        # per element (LUT + reduce)
+    static_mw: float = 25.0
+
+    @property
+    def bytes_per_cycle(self) -> float:
+        return self.dram_gbps / self.freq_ghz
+
+
+@dataclass
+class LayerPerf:
+    cycles: float
+    macs: float
+    utilization: float
+    dram_bytes: float
+    sram_reads: float
+    energy_pj: float
+    bound: str
+    ppu_cycles: float = 0.0
+
+    @property
+    def gops(self) -> float:
+        # 2 ops per MAC, at 1 GHz (cycles == ns)
+        return 2.0 * self.macs / max(1.0, self.cycles)
+
+
+def _extent(df: Dataflow, dim: str, level: int) -> int:
+    """Iteration extent of ``dim`` covered by temporal loops at depth >= level
+    plus the spatial tile."""
+    e = 1
+    for lp in df.temporal[level:]:
+        if lp.dim == dim:
+            e *= lp.size
+    for lp in df.spatial:
+        if lp.dim == dim:
+            e *= lp.size
+    return e
+
+
+def footprint(wl: Workload, df: Dataflow, tensor: str, level: int,
+              data_bytes: int) -> float:
+    """Distinct bytes of ``tensor`` touched by one execution of temporal
+    loops ``level..inner`` (plus the full spatial extent)."""
+    sizes = {d: _extent(df, d, level) for d in wl.iter_dims}
+    t = wl.tensor(tensor)
+    return float(np.prod(wl.tensor_shape(t, sizes))) * data_bytes
+
+
+def dram_traffic(wl: Workload, df: Dataflow, hw: HWConfig,
+                 budget_per_tensor: dict[str, float] | None = None
+                 ) -> dict[str, float]:
+    """Per-tensor DRAM bytes for one full layer execution."""
+    tensors = list(wl.tensors)
+    if budget_per_tensor is None:
+        budget_per_tensor = {t.name: hw.buffer_bytes / len(tensors)
+                             for t in tensors}
+    out: dict[str, float] = {}
+    n_T = df.n_T
+    for t in tensors:
+        db = hw.acc_bytes if t.role == "output" else hw.data_bytes
+        # smallest level whose working set fits this tensor's share
+        lvl = n_T
+        for level in range(n_T + 1):
+            if footprint(wl, df, t.name, level, db) <= budget_per_tensor[t.name]:
+                lvl = level
+                break
+        replay = 1.0
+        for lp in df.temporal[:lvl]:
+            replay *= lp.size
+        fp = footprint(wl, df, t.name, lvl, db)
+        traffic = fp * replay
+        if t.role == "output":
+            # spill partial sums if a reduction loop lies outside the scope
+            dep_dims = {wl.iter_dims[i]
+                        for i in np.nonzero(t.fmap.M.any(axis=0))[0]}
+            spills = any(lp.dim not in dep_dims for lp in df.temporal[:lvl])
+            traffic = traffic * (2.0 if spills else 1.0)
+        out[t.name] = traffic
+    return out
+
+
+def layer_perf(
+    wl: Workload,
+    df: Dataflow,
+    hw: HWConfig,
+    true_sizes: dict[str, int] | None = None,
+    data_nodes_per_tensor: dict[str, int] | None = None,
+    ppu_elements: float = 0.0,
+) -> LayerPerf:
+    """Predict latency + energy of executing ``wl`` under ``df`` on ``hw``.
+
+    ``true_sizes`` gives the un-padded problem dims (utilization accounting);
+    ``data_nodes_per_tensor`` plugs in the ADG's generated data-node counts
+    (defaults assume one bank read per FU — edge-fed worst case).
+    """
+    sizes = df.sizes()
+    padded_macs = float(np.prod([sizes[d] for d in wl.iter_dims]))
+    if true_sizes:
+        true_macs = float(np.prod([min(true_sizes.get(d, sizes[d]), sizes[d])
+                                   for d in wl.iter_dims]))
+    else:
+        true_macs = padded_macs
+    util = true_macs / padded_macs
+
+    compute_cycles = float(df.total_cycles)
+    fill = float(np.sum(df.R_S))  # systolic fill/drain
+    compute_cycles += fill
+
+    traffic = dram_traffic(wl, df, hw)
+    dram_bytes = float(sum(traffic.values()))
+    mem_cycles = dram_bytes / hw.bytes_per_cycle
+
+    ppu_cycles = ppu_elements / max(1, hw.n_ppus)
+    cycles = max(compute_cycles, mem_cycles) + ppu_cycles
+    bound = "memory" if mem_cycles > compute_cycles else "compute"
+
+    # SRAM reads: data nodes touch banks; everything else rides the links
+    if data_nodes_per_tensor is None:
+        data_nodes_per_tensor = {t.name: df.n_fus for t in wl.tensors}
+    sram_reads = 0.0
+    for t in wl.tensors:
+        dn = data_nodes_per_tensor.get(t.name, df.n_fus)
+        db = hw.acc_bytes if t.role == "output" else hw.data_bytes
+        sram_reads += compute_cycles * min(dn, df.n_fus) * db
+
+    sram_pj = sram_read_pj_per_byte(hw.buffer_bytes) * sram_reads
+    link_pj = hw.e_reg_pj_per_byte * compute_cycles * df.n_fus * hw.data_bytes
+    energy = (true_macs * hw.e_mac_pj
+              + sram_pj + link_pj
+              + dram_bytes * DRAM_PJ_PER_BYTE
+              + ppu_elements * hw.e_ppu_pj
+              + hw.static_mw * cycles / hw.freq_ghz * 1e-3)  # mW·ns = pJ
+    return LayerPerf(cycles=cycles, macs=true_macs, utilization=util,
+                     dram_bytes=dram_bytes, sram_reads=sram_reads,
+                     energy_pj=energy, bound=bound, ppu_cycles=ppu_cycles)

@@ -1,0 +1,1 @@
+from .straggler import ElasticPlanner, StragglerMonitor

@@ -1,0 +1,130 @@
+"""Straggler detection + elastic re-mesh planning (simulated control plane).
+
+On a real pod these run in the coordinator process: per-host step-time
+telemetry feeds an EWMA outlier detector; when a host is flagged dead or
+persistently slow, the planner proposes the largest well-formed
+(pod, data, model) mesh over the surviving hosts and the job restarts from
+the latest checkpoint under the new topology (the checkpoint manager's
+resharding restore + the stateless data pipeline make the resume exact).
+
+Policies implemented:
+  * ``StragglerMonitor`` — EWMA per host; flags hosts slower than
+    ``ratio_threshold ×`` the fleet median for ``patience`` consecutive
+    steps; hard-fails hosts that miss ``dead_after`` heartbeats.
+  * ``ElasticPlanner`` — keeps the model axis fixed (TP degree is a property
+    of the partitioned weights), shrinks the data axis to the largest value
+    whose product divides the surviving host count, and drops to fewer pods
+    when an entire pod is unhealthy.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["StragglerMonitor", "ElasticPlanner", "MeshPlan"]
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, alpha: float = 0.2,
+                 ratio_threshold: float = 1.8, patience: int = 3,
+                 dead_after: int = 5):
+        self.n_hosts = n_hosts
+        self.alpha = alpha
+        self.ratio_threshold = ratio_threshold
+        self.patience = patience
+        self.dead_after = dead_after
+        self.ewma = np.full(n_hosts, np.nan)
+        self.slow_streak = np.zeros(n_hosts, dtype=int)
+        self.missed = np.zeros(n_hosts, dtype=int)
+        self.step = 0
+
+    def record(self, step_times: dict[int, float]) -> None:
+        """step_times: host -> seconds for this step (absent = missed
+        heartbeat)."""
+        self.step += 1
+        for h in range(self.n_hosts):
+            if h in step_times:
+                t = step_times[h]
+                self.missed[h] = 0
+                prev = self.ewma[h]
+                self.ewma[h] = t if np.isnan(prev) else \
+                    self.alpha * t + (1 - self.alpha) * prev
+            else:
+                self.missed[h] += 1
+
+    def stragglers(self) -> list[int]:
+        valid = self.ewma[~np.isnan(self.ewma)]
+        if len(valid) < max(2, self.n_hosts // 2):
+            return []
+        med = float(np.median(valid))
+        out = []
+        for h in range(self.n_hosts):
+            if np.isnan(self.ewma[h]):
+                continue
+            if self.ewma[h] > self.ratio_threshold * med:
+                self.slow_streak[h] += 1
+            else:
+                self.slow_streak[h] = 0
+            if self.slow_streak[h] >= self.patience:
+                out.append(h)
+        return out
+
+    def dead(self) -> list[int]:
+        return [h for h in range(self.n_hosts)
+                if self.missed[h] >= self.dead_after]
+
+    def healthy(self) -> list[int]:
+        bad = set(self.stragglers()) | set(self.dead())
+        return [h for h in range(self.n_hosts) if h not in bad]
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    n_hosts: int
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+class ElasticPlanner:
+    """Largest well-formed mesh over surviving hosts (model axis pinned)."""
+
+    def __init__(self, devices_per_host: int = 4, model_axis: int = 16,
+                 pods: int = 2, hosts_per_pod: int | None = None):
+        self.devices_per_host = devices_per_host
+        self.model_axis = model_axis
+        self.pods = pods
+        self.hosts_per_pod = hosts_per_pod
+
+    def plan(self, healthy_hosts: list[int], total_hosts: int) -> MeshPlan:
+        per_pod = self.hosts_per_pod or total_hosts // self.pods
+        pod_health = defaultdict(int)
+        for h in healthy_hosts:
+            pod_health[h // per_pod] += 1
+        # a pod participates only if all its hosts are healthy (symmetric DP)
+        live_pods = [p for p in range(self.pods) if pod_health[p] == per_pod]
+        if not live_pods:
+            # degrade: use the healthiest pod with a shrunken data axis
+            best = max(range(self.pods), key=lambda p: pod_health[p])
+            hosts = pod_health[best]
+            devices = hosts * self.devices_per_host
+            data = max(1, devices // self.model_axis)
+            while data > 1 and data * self.model_axis > devices:
+                data -= 1
+            # shrink to a power-of-two data axis for divisibility
+            data = 1 << int(np.log2(max(1, data)))
+            return MeshPlan((data, self.model_axis), ("data", "model"),
+                            hosts)
+        devices = per_pod * self.devices_per_host
+        data = devices // self.model_axis
+        if len(live_pods) == 1:
+            return MeshPlan((data, self.model_axis), ("data", "model"),
+                            per_pod)
+        return MeshPlan((len(live_pods), data, self.model_axis),
+                        ("pod", "data", "model"), per_pod * len(live_pods))

@@ -1,0 +1,98 @@
+"""LEGO-derived BlockSpec tile selection for the TPU kernels.
+
+This is the paper's front end re-targeted at the TPU memory hierarchy
+(DESIGN.md §2): the MXU plays the role of the generated FU array (a GEMM-JK
+design with c = [1,1] *is* the MXU), HBM→VMEM tiling plays the role of the
+data-distribution switches, and the banking inequality (Eq. 9) becomes a
+VMEM working-set budget.  Tile selection maximizes arithmetic intensity
+(reuse) subject to:
+
+  * working set  (bm·bk + bk·bn + bm·bn)·bytes ≤ VMEM budget,
+  * MXU alignment: tiles are multiples of (8, 128) for fp32 / (16, 128) for
+    bf16 — the systolic array's native lane/sublane shape,
+  * the grid covers the problem exactly (pad-to-tile handled by callers).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+VMEM_BYTES = 96 * 1024 * 1024 // 8  # ~12 MB usable of 16 MB v5e VMEM
+LANE = 128
+
+
+def _sublane(dtype_bytes: int) -> int:
+    return max(8, 32 // dtype_bytes)
+
+
+def _align(x: int, m: int) -> int:
+    return max(m, (x // m) * m)
+
+
+@dataclass(frozen=True)
+class GemmTiles:
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def vmem_bytes(self) -> int:
+        return 4 * (self.bm * self.bk + self.bk * self.bn + self.bm * self.bn)
+
+
+def gemm_tiles(M: int, N: int, K: int, dtype_bytes: int = 2,
+               vmem_budget: int = VMEM_BYTES) -> GemmTiles:
+    """Pick (bm, bn, bk) maximizing reuse within the VMEM budget.
+
+    Arithmetic intensity of a (bm, bn, bk) step is
+    ``bm·bn·bk / (bm·bk + bk·bn + bm·bn)`` — maximized by square-ish tiles,
+    i.e. exactly the banking-style balance condition of Eq. 9 applied to the
+    HBM→VMEM level.
+    """
+    sub = _sublane(dtype_bytes)
+    best, best_ai = None, -1.0
+    for bm in (sub, 128, 256, 512):
+        if bm > max(sub, M):
+            continue
+        for bn in (LANE, 256, 512, 1024):
+            if bn > max(LANE, N):
+                continue
+            for bk in (LANE, 256, 512, 1024, 2048):
+                if bk > max(LANE, K):
+                    continue
+                ws = dtype_bytes * (bm * bk + bk * bn) + 4 * bm * bn
+                if ws > vmem_budget:
+                    continue
+                ai = (bm * bn * bk) / (bm * bk + bk * bn + bm * bn)
+                # prefer full-problem coverage with fewer ragged tiles
+                waste = (np.ceil(M / bm) * bm / max(M, 1)
+                         * np.ceil(N / bn) * bn / max(N, 1))
+                score = ai / waste
+                if score > best_ai:
+                    best_ai, best = score, GemmTiles(bm, bn, bk)
+    assert best is not None
+    return best
+
+
+def attention_tiles(Tq: int, Tk: int, D: int, dtype_bytes: int = 2,
+                    vmem_budget: int = VMEM_BYTES) -> tuple[int, int]:
+    """(bq, bk) for streaming attention: score tile bq×bk plus q/k/v tiles
+    must fit; softmax state is O(bq)."""
+    best, best_ai = (128, 128), -1.0
+    sub = _sublane(dtype_bytes)
+    for bq in (sub, 128, 256, 512):
+        if bq > max(sub, Tq):
+            continue
+        for bk in (LANE, 256, 512, 1024):
+            if bk > max(LANE, Tk):
+                continue
+            ws = dtype_bytes * (bq * D + 2 * bk * D) + 4 * (bq * bk + 2 * bq * D)
+            if ws > vmem_budget:
+                continue
+            ai = (bq * bk * D) / (bq * D + bk * D + bq * bk)
+            if ai > best_ai:
+                best_ai, best = ai, (bq, bk)
+    return best

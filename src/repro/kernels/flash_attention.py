@@ -1,0 +1,126 @@
+"""Streaming-softmax attention Pallas kernel (FlashAttention-style, TPU).
+
+In LEGO terms this is the fused two-dataflow attention design of Fig. 10:
+the QKᵀ stage and the PV stage share the score tile *in place* (score-
+stationary — the S/P tensor never leaves VMEM), and the softmax runs on the
+"PPU" (the VPU) between the two MXU stages.  Supports:
+
+  * causal masking with an absolute-position ``offset`` (decode reuses the
+    same kernel with Tq = 1, offset = S − 1),
+  * sliding-window attention (Mistral/Gemma-2 local layers),
+  * logit soft-capping (Gemma-2),
+  * GQA: the kv-head BlockSpec index map folds the query-group division —
+    no materialized KV repeat.
+
+Grid (B, Hq, Tq/bq, Tk/bk), kv innermost; running (m, l, acc) in VMEM
+scratch; fully-masked kv blocks are skipped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+STATE_LANES = 128  # TPU-friendly lane width for the (m, l) state tiles
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  softcap: float | None, offset: int, bq: int, bk: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq + offset
+    k_start = ki * bk
+    needed = True
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    if window is not None:
+        needed = jnp.logical_and(needed, k_start + bk > q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(
+            p, axis=-1, keepdims=True) * jnp.ones_like(l_ref)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new * jnp.ones_like(m_ref)
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _done():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    bq: int, bk: int, causal: bool = True, window: int | None = None,
+    softcap: float | None = None, scale: float | None = None,
+    offset: int = 0, interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    assert Tq % bq == 0 and Tk % bk == 0
+    scale = scale if scale is not None else D ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, offset=offset, bq=bq, bk=bk)
+    grid = (B, Hq, Tq // bq, Tk // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, STATE_LANES), jnp.float32),  # running max
+            pltpu.VMEM((bq, STATE_LANES), jnp.float32),  # running sum
+            pltpu.VMEM((bq, D), jnp.float32),            # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

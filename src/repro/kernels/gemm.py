@@ -1,0 +1,58 @@
+"""Tiled GEMM Pallas kernel — the TPU realization of LEGO's GEMM-JK design.
+
+The MXU *is* the generated systolic FU array (c = [1,1]); this kernel
+supplies the two outer memory levels LEGO generates around it: the grid is
+the temporal loop nest (M_T→I) and the BlockSpecs are the data-distribution
+switches.  Tile sizes come from :mod:`repro.kernels.autotile` (the banking /
+working-set inequality applied to VMEM).
+
+Grid (M/bm, N/bn, K/bk) with K innermost ("arbitrary" semantics): the fp32
+accumulator tile stays resident in VMEM across the K sweep — the Y-revisit
+stationary reuse the front end derives for GEMM (Δt on the k-tile loop).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_pallas(x: jax.Array, w: jax.Array, *, bm: int, bn: int, bk: int,
+                interpret: bool = False) -> jax.Array:
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"pad to tiles first: {(M, N, K)} vs {(bm, bn, bk)}"
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,122 @@
+"""Public kernel API: jit'd wrappers around the Pallas kernels.
+
+Each op pads to the LEGO-derived tile shapes (autotile), invokes the Pallas
+kernel, and unpads.  ``backend`` selects:
+
+  * "pallas"    — pallas_call targeting TPU (interpret=False),
+  * "interpret" — pallas_call in interpret mode (CPU validation),
+  * "ref"       — the pure-jnp oracle (used by models on CPU and by the
+                  multi-pod dry-run, whose HLO must lower on any backend).
+
+Default: "pallas" on TPU, "ref" elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as R
+from .autotile import attention_tiles, gemm_tiles
+from .flash_attention import flash_attention_pallas
+from .gemm import gemm_pallas
+from .rwkv6 import rwkv6_pallas
+from .ssm_scan import ssm_scan_pallas
+
+__all__ = ["gemm", "flash_attention", "decode_attention", "ssm_scan", "rwkv6",
+           "default_backend"]
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_to(x, mults):
+    pads = []
+    needs = False
+    for dim, m in zip(x.shape, mults):
+        p = (-dim) % m
+        pads.append((0, p))
+        needs = needs or p
+    return jnp.pad(x, pads) if needs else x
+
+
+def gemm(x: jax.Array, w: jax.Array, backend: str | None = None) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return R.gemm_ref(x, w)
+    M, K = x.shape
+    _, N = w.shape
+    t = gemm_tiles(M, N, K, x.dtype.itemsize)
+    xp = _pad_to(x, (t.bm, t.bk))
+    wp = _pad_to(w, (t.bk, t.bn))
+    out = gemm_pallas(xp, wp, bm=t.bm, bn=t.bn, bk=t.bk,
+                      interpret=(backend == "interpret"))
+    return out[:M, :N]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, offset: int = 0,
+                    backend: str | None = None) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return R.attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, offset=offset)
+    B, Hq, Tq, D = q.shape
+    Tk = k.shape[2]
+    bq, bk = attention_tiles(Tq, Tk, D, q.dtype.itemsize)
+    bq, bk = min(bq, Tq), min(bk, Tk)
+    qp = _pad_to(q, (1, 1, bq, 1))
+    kp = _pad_to(k, (1, 1, bk, 1))
+    vp = _pad_to(v, (1, 1, bk, 1))
+    # padded kv columns must be masked out: they sit at positions >= Tk,
+    # which the causal mask handles when offset keeps q rows < Tk; for the
+    # non-causal case we pass an explicit window covering only real keys.
+    out = flash_attention_pallas(
+        qp, kp, vp, bq=bq, bk=bk, causal=causal, window=window,
+        softcap=softcap, scale=scale, offset=offset,
+        interpret=(backend == "interpret"))
+    return out[:, :, :Tq]
+
+
+def decode_attention(q, k, v, *, window=None, softcap=None, scale=None,
+                     pos=None, backend: str | None = None) -> jax.Array:
+    """Single-token decode over a KV cache: q (B, Hq, 1, D), kv (B, Hkv, S, D).
+    ``pos`` = the query's absolute position; cache entries beyond it are
+    masked (defaults to S − 1, full cache).  The Pallas path reuses the flash
+    kernel with offset = pos (flash-decoding style streaming); a *traced*
+    pos requires the ref path (the kernel offset is static)."""
+    backend = backend or default_backend()
+    if backend == "ref" or (pos is not None and not isinstance(pos, int)):
+        return R.decode_attention_ref(q, k, v, window=window,
+                                      softcap=softcap, scale=scale, pos=pos)
+    S = k.shape[2]
+    off = pos if pos is not None else S - 1
+    return flash_attention(q, k, v, causal=True, window=window,
+                           softcap=softcap, scale=scale, offset=off,
+                           backend=backend)
+
+
+def ssm_scan(x, dt, A, B, C, D, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return R.selective_scan_ref(x, dt, A, B, C, D)
+    Bt, L, Dm = x.shape
+    bd = min(128, Dm)
+    bl = min(128, L)
+    assert Dm % bd == 0 and L % bl == 0
+    return ssm_scan_pallas(x, dt, A, B, C, D, bd=bd, bl=bl,
+                           interpret=(backend == "interpret"))
+
+
+def rwkv6(r, k, v, w, u, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return R.rwkv6_ref(r, k, v, w, u)
+    T = r.shape[2]
+    bt = min(64, T)
+    assert T % bt == 0
+    return rwkv6_pallas(r, k, v, w, u, bt=bt,
+                        interpret=(backend == "interpret"))

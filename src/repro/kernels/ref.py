@@ -1,0 +1,272 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path of
+the model zoo — models and kernels share exactly these semantics).
+
+All functions are jit-compatible, fp32-accumulating, and shaped:
+
+  gemm_ref           : (M, K) @ (K, N) -> (M, N)
+  attention_ref      : q (B, Hq, Tq, D), k/v (B, Hkv, Tk, D) -> (B, Hq, Tq, D)
+                       causal / sliding-window / logit-softcap / GQA
+  decode_attention_ref: q (B, Hq, 1, D) over a KV cache (B, Hkv, S, D)
+  selective_scan_ref : Mamba-style diagonal SSM scan
+  rwkv6_ref          : RWKV-6 (Finch) wkv recurrence with data-dependent decay
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def _mask(tq: int, tk: int, *, causal: bool, window: int | None,
+          offset: int = 0) -> jax.Array:
+    """(tq, tk) boolean mask. ``offset`` = absolute position of q row 0 minus
+    k col 0 (for decode: offset = S - 1)."""
+    qpos = jnp.arange(tq)[:, None] + offset
+    kpos = jnp.arange(tk)[None, :]
+    m = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None,
+                  offset: int = 0) -> jax.Array:
+    """Grouped-query attention without materializing repeated KV: q is
+    reshaped to (B, Hkv, G, Tq, D) and contracted against the shared KV —
+    a ``jnp.repeat`` here would force GSPMD to reshard/replicate the whole
+    (possibly sequence-sharded) cache."""
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    # bf16 inputs stay bf16 with fp32 accumulation (a full .astype(f32) on a
+    # sequence-sharded KV cache makes XLA materialize an f32 copy of the
+    # whole cache); fp32 inputs keep exact-f32 math for the kernel oracles.
+    lowp = q.dtype == jnp.bfloat16
+    cast = (lambda t: t) if lowp else (lambda t: t.astype(jnp.float32))
+    qg = cast(q).reshape(B, Hkv, g, Tq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, cast(k),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    m = _mask(Tq, Tk, causal=causal, window=window, offset=offset)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(k.dtype) if lowp else p,
+                   cast(v), preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, Tq, D).astype(q.dtype)
+
+
+def chunked_attention_ref(q, k, v, *, causal: bool = True,
+                          window: int | None = None,
+                          softcap: float | None = None,
+                          scale: float | None = None,
+                          kv_chunk: int = 1024) -> jax.Array:
+    """Flash-style streaming attention in pure jnp: lax.scan over KV chunks
+    with running (max, sum, acc) — O(T·chunk) score memory instead of O(T²).
+
+    This is the LEGO score-stationary dataflow expressed at the XLA level
+    (the Pallas kernel's exact algorithm, compilable on any backend); it is
+    the "beyond-paper" memory optimization used by the §Perf loop for the
+    long-sequence training/prefill cells.  Numerics: same streaming-softmax
+    recurrence as the kernel; bf16 operands keep f32 accumulation.
+    """
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kv_chunk = min(kv_chunk, Tk)
+    assert Tk % kv_chunk == 0
+    n_chunks = Tk // kv_chunk
+    lowp = q.dtype == jnp.bfloat16
+    cast = (lambda t: t) if lowp else (lambda t: t.astype(jnp.float32))
+
+    qg = cast(q).reshape(B, Hkv, g, Tq, D)
+    ks = cast(k).reshape(B, Hkv, n_chunks, kv_chunk, D).swapaxes(0, 2)
+    vs = cast(v).reshape(B, Hkv, n_chunks, kv_chunk, D).swapaxes(0, 2)
+    qpos = jnp.arange(Tq)
+
+    def step(carry, inp):
+        m, l, acc, ci = carry
+        kc, vc = inp  # (Hkv, B, kv_chunk, D) after swap — fix axes below
+        kc = kc.swapaxes(0, 1)
+        vc = vc.swapaxes(0, 1)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((Tq, kv_chunk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bhkd->bhgqd",
+                        p.astype(kc.dtype) if lowp else p, vc,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc, ci + 1), None
+
+    m0 = jnp.full((B, Hkv, g, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Tq, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)),
+                                     (ks, vs))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l[..., None]
+    return out.reshape(B, Hq, Tq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, *, window: int | None = None,
+                         softcap: float | None = None,
+                         scale: float | None = None,
+                         pos: int | jax.Array | None = None) -> jax.Array:
+    """One-token decode: q (B, Hq, 1, D), cache (B, Hkv, S, D).  ``pos`` is
+    the query's absolute position (cache entries beyond it are masked); with
+    a full cache pos = S-1."""
+    B, Hq, Tq, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    if pos is None:
+        pos = S - 1
+    sc = scale if scale is not None else Dh ** -0.5
+    lowp = q.dtype == jnp.bfloat16
+    cast = (lambda t: t) if lowp else (lambda t: t.astype(jnp.float32))
+    qg = cast(q).reshape(B, Hkv, g * Tq, Dh)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qg, cast(k),
+                   preferred_element_type=jnp.float32) * sc
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(S)
+    m = kpos <= pos
+    if window is not None:
+        m &= kpos > pos - window
+    s = jnp.where(m[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(k.dtype) if lowp else p,
+                   cast(v), preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, Tq, Dh).astype(q.dtype)
+
+
+def selective_scan_ref(x, dt, A, B, C, D_skip, h0=None):
+    """Mamba-style diagonal selective scan (S6, real A < 0).
+
+    x (Bt, L, Dm), dt (Bt, L, Dm) [post-softplus], A (Dm, N), B/C (Bt, L, N),
+    D_skip (Dm,).  Returns (y (Bt, L, Dm), h_last (Bt, Dm, N)).
+    """
+    in_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * Af[None, None])         # (Bt, L, Dm, N)
+    dBx = dt[..., None] * Bf[:, :, None, :] * x[..., None]
+
+    def combine(a, b):
+        (ga, xa), (gb, xb) = a, b
+        return ga * gb, xa * gb + xb
+
+    if h0 is not None:
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bldn,bln->bld", h, Cf)
+    y = y + x * D_skip.astype(jnp.float32)[None, None]
+    return y.astype(in_dtype), h[:, -1]
+
+
+def chunked_selective_scan_ref(x, dt, A, B, C, D_skip, chunk: int = 256):
+    """Chunked SSM scan: lax.scan over sequence chunks carrying h, each
+    chunk rematerialized (jax.checkpoint) — backward memory drops from
+    O(L·Dm·N) to O((L/chunk)·Dm·N) carries + one in-flight chunk.  Matches
+    the Pallas kernel's chunking (DESIGN.md §2)."""
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0
+    n = L // chunk
+
+    def body(h, inp):
+        xc, dtc, Bc, Cc = inp
+        y, h2 = selective_scan_ref(xc, dtc, A, Bc, Cc, D_skip, h0=h)
+        return h2, y
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (x.reshape(Bt, n, chunk, Dm).swapaxes(0, 1),
+          dt.reshape(Bt, n, chunk, Dm).swapaxes(0, 1),
+          B.reshape(Bt, n, chunk, N).swapaxes(0, 1),
+          C.reshape(Bt, n, chunk, N).swapaxes(0, 1))
+    h0 = jnp.zeros((Bt, Dm, N), jnp.float32)
+    h, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bt, L, Dm)
+    return y, h
+
+
+def chunked_rwkv6_ref(r, k, v, w, u, chunk: int = 256):
+    """Chunked RWKV-6: sequence chunks with the (Dk, Dv) state carried and
+    chunk bodies rematerialized (same memory argument as the SSM scan)."""
+    Bb, H, T, Dk = r.shape
+    Dv = v.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    n = T // chunk
+
+    def body(S, inp):
+        rc, kc, vc, wc = inp
+        o, S2 = rwkv6_ref(rc, kc, vc, wc, u, s0=S)
+        return S2, o
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = tuple(t.reshape(Bb, H, n, chunk, t.shape[-1]).transpose(2, 0, 1, 3, 4)
+               for t in (r, k, v, w))
+    S0 = jnp.zeros((Bb, H, Dk, Dv), jnp.float32)
+    S, os_ = jax.lax.scan(body, S0, xs)
+    o = os_.transpose(1, 2, 0, 3, 4).reshape(Bb, H, T, Dv)
+    return o, S
+
+
+def rwkv6_ref(r, k, v, w, u, s0=None):
+    """RWKV-6 (Finch) wkv: per head, state S (Dk, Dv):
+
+        o_t = rᵗ · (S + diag(u) kᵗ vᵗᵀ)
+        S   = diag(w_t) S + kᵗ vᵗᵀ            (w_t data-dependent, in (0,1))
+
+    r/k/w (B, H, T, Dk), v (B, H, T, Dv), u (H, Dk).
+    Returns (o (B, H, T, Dv), S_last (B, H, Dk, Dv)).
+    """
+    B, H, T, Dk = r.shape
+    Dv = v.shape[-1]
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    S = (jnp.zeros((B, H, Dk, Dv), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B, H, Dk) / (B, H, Dv)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,Dk,Dv)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = (jnp.moveaxis(rf, 2, 0), jnp.moveaxis(kf, 2, 0),
+          jnp.moveaxis(vf, 2, 0), jnp.moveaxis(wf, 2, 0))
+    S, outs = jax.lax.scan(step, S, xs)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), S

@@ -1,0 +1,81 @@
+"""RWKV-6 (Finch) wkv recurrence Pallas kernel.
+
+Data-dependent per-channel decay makes this a gated linear recurrence (not an
+affine loop nest — see DESIGN.md §4); the TPU-native structure mirrors
+:mod:`repro.kernels.ssm_scan`: per-(batch, head) state matrix ``S (Dk, Dv)``
+resident in VMEM scratch, sequence chunked over the innermost grid dim, a
+``fori_loop`` of rank-1 updates inside each chunk:
+
+    o_t = r_t · (S + diag(u)·k_t v_tᵀ)
+    S   = diag(w_t)·S + k_t v_tᵀ
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_ref,
+                 *, bt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)  # (Dk,)
+
+    def step(t, _):
+        r = r_ref[0, 0, t].astype(jnp.float32)  # (Dk,)
+        k = k_ref[0, 0, t].astype(jnp.float32)  # (Dk,)
+        v = v_ref[0, 0, t].astype(jnp.float32)  # (Dv,)
+        w = w_ref[0, 0, t].astype(jnp.float32)  # (Dk,)
+        kv = k[:, None] * v[None, :]            # (Dk, Dv)
+        out = r @ (s_ref[...] + u[:, None] * kv)
+        o_ref[0, 0, t] = out.astype(o_ref.dtype)
+        s_ref[...] = w[:, None] * s_ref[...] + kv
+        return ()
+
+    jax.lax.fori_loop(0, bt, step, ())
+
+    @pl.when(ti == pl.num_programs(2) - 1)
+    def _done():
+        s_out_ref[0, 0] = s_ref[...].astype(s_out_ref.dtype)
+
+
+def rwkv6_pallas(r, k, v, w, u, *, bt: int, interpret: bool = False):
+    """r/k/w (B, H, T, Dk), v (B, H, T, Dv), u (H, Dk).
+    Returns (o (B, H, T, Dv), S_last (B, H, Dk, Dv))."""
+    B, H, T, Dk = r.shape
+    Dv = v.shape[-1]
+    assert T % bt == 0
+    grid = (B, H, T // bt)
+    o, s = pl.pallas_call(
+        functools.partial(_rwkv_kernel, bt=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, Dk), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, Dk), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, Dv), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, Dk), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, Dk), lambda b, h, t: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bt, Dv), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, Dk, Dv), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, Dv), r.dtype),
+            jax.ShapeDtypeStruct((B, H, Dk, Dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return o, s

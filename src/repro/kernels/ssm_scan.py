@@ -1,0 +1,88 @@
+"""Chunked selective-scan (Mamba S6) Pallas kernel.
+
+The recurrence ``h ← exp(Δ·A)·h + Δ·B·x`` is *not* an affine MAC loop nest,
+so LEGO's interconnect generation does not apply (DESIGN.md §4 — noted
+inapplicability for SSM blocks); the kernel instead follows the TPU-native
+chunking pattern: the sequence is cut into VMEM-sized chunks, the state
+``h (bd, N)`` lives in VMEM scratch and is carried across the innermost
+("arbitrary") grid dimension, and each chunk runs a register-level
+``fori_loop``.
+
+Grid (B, Dm/bd, L/bl); blocks: x/dt (1, bl, bd), B/C (1, bl, N), A (bd, N).
+Outputs: y (B, L, Dm) and the final state h (B, Dm, N) — the state handoff
+used by decode and by sequence-parallel sharding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_out_ref,
+                 h_ref, *, bl: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = A_ref[...].astype(jnp.float32)          # (bd, N)
+    Dskip = D_ref[...].astype(jnp.float32)      # (1, bd)
+
+    def step(l, _):
+        x = x_ref[0, l].astype(jnp.float32)     # (bd,)
+        dt = dt_ref[0, l].astype(jnp.float32)   # (bd,)
+        Bt = B_ref[0, l].astype(jnp.float32)    # (N,)
+        Ct = C_ref[0, l].astype(jnp.float32)    # (N,)
+        dA = jnp.exp(dt[:, None] * A)           # (bd, N)
+        h = dA * h_ref[...] + (dt * x)[:, None] * Bt[None, :]
+        h_ref[...] = h
+        y = h @ Ct + x * Dskip[0]
+        y_ref[0, l] = y.astype(y_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, bl, step, ())
+
+    @pl.when(ci == pl.num_programs(2) - 1)
+    def _done():
+        h_out_ref[0] = h_ref[...].astype(h_out_ref.dtype)
+
+
+def ssm_scan_pallas(x, dt, A, B, C, D, *, bd: int, bl: int,
+                    interpret: bool = False):
+    """x/dt (Bt, L, Dm), A (Dm, N), B/C (Bt, L, N), D (Dm,).
+    Returns (y (Bt, L, Dm), h_last (Bt, Dm, N))."""
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+    assert Dm % bd == 0 and L % bl == 0
+    grid = (Bt, Dm // bd, L // bl)
+    y, h = pl.pallas_call(
+        functools.partial(_scan_kernel, bl=bl),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bl, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, bl, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((bd, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, bl, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, bl, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, bd), lambda b, d, c: (0, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bl, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, bd, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, L, Dm), x.dtype),
+            jax.ShapeDtypeStruct((Bt, Dm, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, B, C, D.reshape(1, -1))
+    return y, h

@@ -1,0 +1,3 @@
+from .common import BlockSpec, ModelConfig
+from .transformer import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn)

@@ -1,0 +1,2 @@
+from .adamw import (AdamWState, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_schedule)

@@ -1,0 +1,76 @@
+"""Sharded AdamW + schedules (pure pytree, no external deps).
+
+Optimizer state mirrors the parameter pytree, so the same PartitionSpecs
+shard it (ZeRO-style: with params FSDP-sharded over "data", the fp32
+moments are too — 10 bytes/param spread over the whole mesh).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "clip_by_global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0)
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(params, grads, state: AdamWState, lr, *,
+                 b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                 max_grad_norm=1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        mdt, vdt = m.dtype, v.dtype  # moments may be bf16 (low-mem mode)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(mdt), v.astype(vdt))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, mu, nu), {"grad_norm": gnorm}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr_at

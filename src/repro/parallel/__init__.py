@@ -1,0 +1,2 @@
+from .sharding import (AxisNames, choose_axes, logical_to_spec, named_sharding,
+                       shard_params_spec, with_constraint)

@@ -1,0 +1,175 @@
+"""Divisibility-aware declarative sharding (DESIGN.md §5).
+
+Logical axis names decouple model code from the physical mesh:
+
+  * ``batch``  → ("pod", "data")      pure DP across pods, DP/FSDP within
+  * ``fsdp``   → ("data",)            parameter/optimizer sharding
+  * ``tensor`` → ("model",)           TP / EP
+  * ``seq``    → ("data", "model")    sequence sharding for long-context
+  * ``expert`` → ("model",)           expert parallelism
+  * ``none``   → replicated
+
+``logical_to_spec`` resolves a tuple of logical names against a concrete
+mesh, *dropping* (a) axes not present in the mesh (a single-pod mesh has no
+"pod") and (b) axes whose size does not divide the dim — the fallback that
+makes all 40 (arch × shape) dry-run cells shardable without per-arch cases
+(e.g. kv_heads = 2 < model = 16 falls back to partial or no sharding).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PROFILES: dict[str, dict[str, tuple[str, ...]]] = {
+    # Megatron-style: TP over "model", FSDP over "data", DP across pods.
+    "tp": {
+        "batch": ("pod", "data"),
+        "fsdp": ("data",),
+        "tensor": ("model",),
+        "seq": ("data", "model"),
+        "seq_model": ("model",),
+        "expert": ("model",),
+        "vocab": ("model",),
+        "none": (),
+    },
+    # ZeRO-3: batch over the whole mesh, params fully sharded, no TP — trades
+    # per-layer activation all-reduces (O(B·T·d), huge at 1M tokens/step)
+    # for per-layer parameter all-gathers (O(params/layer)).  The §Perf
+    # winner for the small-d dense models' train cells.
+    "fsdp": {
+        "batch": ("pod", "data", "model"),
+        "fsdp": ("data", "model"),
+        "tensor": (),
+        "seq": ("data", "model"),
+        "seq_model": ("model",),
+        "expert": ("model",),
+        "vocab": ("model",),
+        "none": (),
+    },
+}
+
+LOGICAL_RULES: dict[str, tuple[str, ...]] = dict(PROFILES["tp"])
+
+
+def set_profile(name: str) -> None:
+    """Switch the global sharding profile ("tp" | "fsdp")."""
+    LOGICAL_RULES.clear()
+    LOGICAL_RULES.update(PROFILES[name])
+
+
+@dataclass(frozen=True)
+class AxisNames:
+    batch: tuple[str, ...] = ("pod", "data")
+    fsdp: str = "data"
+    tensor: str = "model"
+
+
+def choose_axes(dim_size: int, logical: str, mesh: Mesh) -> tuple[str, ...]:
+    """Physical axes for one dim: greedily keep the prefix of the rule's
+    axes that exists in the mesh and whose product divides ``dim_size``."""
+    chosen: list[str] = []
+    prod = 1
+    for ax in LOGICAL_RULES[logical]:
+        if ax not in mesh.axis_names:
+            continue
+        size = mesh.shape[ax]
+        if dim_size % (prod * size) == 0:
+            chosen.append(ax)
+            prod *= size
+    return tuple(chosen)
+
+
+def logical_to_spec(logical_axes: tuple[str, ...], shape: tuple[int, ...],
+                    mesh: Mesh) -> P:
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set[str] = set()
+    entries = []
+    for name, dim in zip(logical_axes, shape):
+        axes = tuple(a for a in choose_axes(dim, name, mesh) if a not in used)
+        # re-check divisibility after dedup
+        prod = 1
+        keep = []
+        for a in axes:
+            if dim % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        used.update(keep)
+        if not keep:
+            entries.append(None)
+        elif len(keep) == 1:
+            entries.append(keep[0])
+        else:
+            entries.append(tuple(keep))
+    return P(*entries)
+
+
+def named_sharding(mesh: Mesh, logical_axes: tuple[str, ...],
+                   shape: tuple[int, ...]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, shape, mesh))
+
+
+def with_constraint(x: jax.Array, mesh: Mesh | None,
+                    logical_axes: tuple[str, ...]) -> jax.Array:
+    """sharding_constraint against logical axes (no-op without a mesh)."""
+    if mesh is None or mesh.size == 1:
+        return x
+    spec = logical_to_spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules (matched by param-path suffix)
+# ---------------------------------------------------------------------------
+
+# ordered (regex, logical axes for the trailing dims) — first match wins.
+# Params are layer-stacked: a leading scan dim is always replicated.
+PARAM_RULES: list[tuple[str, tuple[str, ...]]] = [
+    (r"embed/table", ("vocab", "fsdp")),
+    (r"lm_head/w", ("fsdp", "vocab")),
+    (r"(wq|wk|wv|wkv|in_proj|up|gate|w_up|w_gate|rkvwg|qkv)/w", ("fsdp", "tensor")),
+    (r"(wo|down|w_down|out_proj)/w", ("tensor", "fsdp")),
+    (r"experts/(w_up|w_gate)", ("expert", "fsdp", "tensor")),
+    (r"experts/w_down", ("expert", "tensor", "fsdp")),
+    (r"router/w", ("fsdp", "none")),
+    (r"(conv1d)/w", ("none", "tensor")),
+    (r"(A_log|dt_proj|x_proj|ssm_norm)/?.*", ("tensor", "none")),
+    (r"(time_decay|time_first|u)$", ("none", "none")),
+    (r".*(scale|bias|norm).*", ("none",)),
+]
+
+
+def _logical_for(path: str, ndim: int) -> tuple[str, ...]:
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            if len(logical) > ndim:
+                logical = logical[-ndim:]
+            pad = ("none",) * (ndim - len(logical))
+            return pad + tuple(logical)
+    return ("none",) * ndim
+
+
+def shard_params_spec(params, mesh: Mesh):
+    """PartitionSpec pytree for a parameter pytree (path-rule matched)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def spec_of(path, leaf):
+        pstr = "/".join(_key_str(k) for k in path)
+        logical = _logical_for(pstr, leaf.ndim)
+        return logical_to_spec(logical, leaf.shape, mesh)
+
+    specs = {tuple(path): spec_of(path, leaf) for path, leaf in flat}
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: specs[tuple(p)], params)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

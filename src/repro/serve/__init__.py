@@ -1,0 +1,1 @@
+from .engine import ServeConfig, build_serve_step, decode_state_shapes, generate

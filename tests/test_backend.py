@@ -1,0 +1,237 @@
+"""Back-end tests: codegen, LP delay matching, rewiring, reduction trees,
+pin reuse, power gating, bitwidth inference, cost model."""
+
+import numpy as np
+import pytest
+
+from repro.core import workload as W
+from repro.core.adg import generate_adg
+from repro.core.cost import dag_area_um2, dag_power_mw, design_area_mm2
+from repro.core.dag import DAG, codegen
+from repro.core.dataflow import build_dataflow
+from repro.core.passes import (broadcast_rewire, delay_matching,
+                               extract_reduction_trees, infer_bitwidths,
+                               pin_reuse, power_gate, run_backend)
+
+
+def gemm_jk_adg(P=4):
+    wl = W.gemm()
+    df = build_dataflow(wl, spatial=[("k", P), ("j", P)],
+                        temporal=[("i", 2), ("j", 2), ("k", 2), ("i", 4)],
+                        c=(1, 1), name="gemm-jk")
+    return generate_adg([(wl, df)], name="tpu")
+
+
+def gemm_ij_adg(P=4, c=(0, 0)):
+    wl = W.gemm()
+    df = build_dataflow(wl, spatial=[("i", P), ("j", P)],
+                        temporal=[("i", 2), ("j", 2), ("k", 8)],
+                        c=c, name="gemm-ij")
+    return generate_adg([(wl, df)], name="os")
+
+
+def fused_gemm_adg(P=4):
+    wl = W.gemm()
+    df1 = build_dataflow(wl, spatial=[("k", P), ("j", P)],
+                         temporal=[("i", 2), ("j", 2), ("k", 2), ("i", 4)],
+                         c=(1, 1), name="gemm-jk")
+    df2 = build_dataflow(wl, spatial=[("i", P), ("j", P)],
+                         temporal=[("i", 2), ("j", 2), ("k", 8)],
+                         c=(1, 1), name="gemm-ij")
+    return generate_adg([(wl, df1), (wl, df2)], name="gemm-mj")
+
+
+class TestCodegen:
+    def test_gemm_dag_composition(self):
+        adg = gemm_jk_adg()
+        dag = codegen(adg)
+        assert dag.count("mul") == 16
+        assert dag.count("add") == 16
+        # W preloaded at all 16 FUs; X fed at 4 data nodes
+        reads = [n for n in dag.nodes.values()
+                 if n.kind == "memport" and n.meta.get("direction") == "read"]
+        assert len(reads) == 16 + 4
+        writes = [n for n in dag.nodes.values()
+                  if n.kind == "memport" and n.meta.get("direction") == "write"]
+        assert len(writes) == 4
+        # shared control: exactly one timestamp counter (§III-D)
+        assert dag.count("counter") == 1
+
+    def test_dag_is_timeable(self):
+        adg = gemm_jk_adg()
+        dag = codegen(adg)
+        res = delay_matching(dag)
+        assert res.register_bits >= 0
+        for e in dag.edges:
+            assert e.el >= 0
+
+
+class TestDelayMatching:
+    def test_aligns_diamond(self):
+        dag = DAG()
+        src = dag.add("input", 8)
+        a = dag.add("add", 8)      # latency 1
+        b = dag.add("mul", 8)      # latency 1
+        c = dag.add("add", 8)
+        dag.wire(src, a)
+        dag.wire(src, b)
+        long = dag.add("add", 8)
+        dag.wire(b, long)
+        dag.wire(a, c)
+        dag.wire(long, c)
+        res = delay_matching(dag)
+        # path src->b->long is 2 cycles, src->a is 1: one 8-bit reg inserted
+        el = {(e.src, e.dst): e.el for e in dag.edges}
+        assert el[(a, c)] == 1
+        assert res.register_bits == 8
+
+    def test_wide_edges_attract_fewer_registers(self):
+        # delay on a 32-bit path should migrate to the 8-bit path
+        dag = DAG()
+        s = dag.add("input", 8)
+        w = dag.add("add", 32)
+        n1 = dag.add("add", 8)
+        n2 = dag.add("add", 8)
+        j = dag.add("add", 32)
+        dag.wire(s, w, bits=8)
+        dag.wire(s, n1, bits=8)
+        dag.wire(n1, n2, bits=8)
+        dag.wire(w, j, bits=32)
+        dag.wire(n2, j, bits=8)
+        res = delay_matching(dag)
+        el = {(e.src, e.dst): e.el for e in dag.edges}
+        assert el[(w, j)] == 1 and res.register_bits == 32 or \
+            el[(s, w)] == 1  # either way the LP is optimal: 32 bits max
+        assert res.register_bits <= 32
+
+
+class TestBroadcastRewire:
+    def test_chain_replaces_skewed_broadcast(self):
+        # a source broadcasting to 6 consumers that need increasing delays
+        dag = DAG()
+        src = dag.add("addrgen", 20)
+        sink_edges = []
+        for i in range(6):
+            # consumer i sits behind a structural delay chain of depth i
+            prev = src
+            port = dag.add("memport", 20, i=i)
+            dag.wire(src, port, bits=20)
+            # give each memport a downstream alignment requirement via a
+            # second path with i registers of structural latency
+            sink_edges.append(port)
+        anchor = dag.add("input", 20)
+        join = dag.add("add", 20)
+        for i, port in enumerate(sink_edges):
+            r = dag.add("reg", 20, depth=6 - i)
+            dag.wire(port, r, bits=20)
+            dag.wire(r, join, bits=20)
+        before = delay_matching(dag).register_bits
+        res = broadcast_rewire(dag)
+        assert res.register_bits_after <= before
+        # rewired graph is still consistent
+        for e in dag.edges:
+            assert e.el >= 0
+
+
+class TestReductionTree:
+    def test_extracts_combinational_chain(self):
+        # synthetic combinational adder chain (6 adders)
+        dag = DAG()
+        prev = dag.add("input", 32)
+        leaves = []
+        for i in range(6):
+            a = dag.add("add", 32)
+            leaf = dag.add("mul", 16)
+            dag.wire(leaf, a)
+            dag.wire(prev, a)
+            leaves.append(leaf)
+            prev = a
+        out = dag.add("output", 32)
+        dag.wire(prev, out)
+        res = extract_reduction_trees(dag)
+        assert res.chains_extracted == 1
+        assert res.adders_removed == 6
+        assert dag.count("reduce") == 1
+        red = [n for n in dag.nodes.values() if n.kind == "reduce"][0]
+        # 6 muls + 1 chain head input
+        assert red.meta["fan"] == 7
+        # latency of balanced tree < chain
+        assert red.latency == 3
+
+    def test_attention_pv_reduction_chain_in_real_design(self):
+        wl = W.attention_pv()
+        df = build_dataflow(wl, spatial=[("m", 2), ("n", 8)],
+                            temporal=[("b", 2), ("m", 2), ("d", 8)],
+                            c=(0, 0), name="attn-pv")
+        adg = generate_adg([(wl, df)], name="attn")
+        dag = codegen(adg)
+        res = extract_reduction_trees(dag)
+        assert res.chains_extracted >= 1
+
+
+class TestPinReuse:
+    def test_ilp_reduces_ports(self):
+        dag = DAG()
+        dag.dataflows = ["df_a", "df_b"]
+        red = dag.add("reduce", 32, fan=4)
+        # 2 pins live in df_a, 2 different pins live in df_b → 2 ports suffice
+        for name, df in [("a1", "df_a"), ("a2", "df_a"),
+                         ("b1", "df_b"), ("b2", "df_b")]:
+            src = dag.add("mul", 16, users={df})
+            dag.wire(src, red)
+        res = pin_reuse(dag)
+        assert res.nodes_optimized == 1
+        assert res.pins_before == 4 and res.pins_after == 2
+        assert dag.nodes[red].meta["ports"] == 2
+
+    def test_no_reuse_when_all_live(self):
+        dag = DAG()
+        dag.dataflows = ["only"]
+        red = dag.add("reduce", 32, fan=3)
+        for _ in range(3):
+            src = dag.add("mul", 16, users={"only"})
+            dag.wire(src, red)
+        res = pin_reuse(dag)
+        assert res.nodes_optimized == 0
+
+
+class TestPowerGateBits:
+    def test_power_gating_marks_partial_users(self):
+        adg = fused_gemm_adg()
+        dag = codegen(adg)
+        n = power_gate(dag)
+        assert n >= 0
+        p_all = dag_power_mw(dag, active_df=None).total_mw
+        p_one = dag_power_mw(dag, active_df="gemm-jk").total_mw
+        assert p_one <= p_all
+
+    def test_bitwidth_inference_saves_bits(self):
+        adg = gemm_jk_adg()
+        dag = codegen(adg)
+        saved = infer_bitwidths(dag, data_bits=8, max_accum=64)
+        assert saved > 0
+        for n in dag.nodes.values():
+            assert 2 <= n.bits <= 32
+
+
+class TestBackendDriver:
+    def test_optimized_beats_baseline(self):
+        adg = fused_gemm_adg()
+        d_base = codegen(adg)
+        base = run_backend(d_base, optimize=False)
+        d_opt = codegen(adg)
+        opt = run_backend(d_opt, optimize=True)
+        a_base = dag_area_um2(d_base).total_um2
+        a_opt = dag_area_um2(d_opt).total_um2
+        assert a_opt < a_base  # paper: ~35% average area saving
+        p_base = dag_power_mw(d_base).total_mw
+        p_opt = dag_power_mw(d_opt, active_df="gemm-jk").total_mw
+        assert p_opt < p_base
+
+    def test_design_area_anchor_sanity(self):
+        adg = gemm_jk_adg(P=4)
+        dag = codegen(adg)
+        run_backend(dag)
+        parts = design_area_mm2(dag, buffer_bytes=256 * 1024, banks=16)
+        assert 0.5 < parts["total_mm2"] < 5.0
+        assert parts["buffers"] > parts["fu_array"]  # buffers dominate (Fig. 12)

@@ -1,0 +1,240 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle, swept
+over shapes and dtypes, plus hypothesis property tests."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.kernels.autotile import attention_tiles, gemm_tiles
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gemm import gemm_pallas
+from repro.kernels.rwkv6 import rwkv6_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def keys(n):
+    return jax.random.split(KEY, n)
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,N,K,bm,bn,bk", [
+    (32, 32, 64, 16, 16, 32),
+    (64, 48, 32, 16, 16, 16),
+    (16, 128, 16, 16, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_shapes_dtypes(M, N, K, bm, bn, bk, dtype):
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (M, K), dtype)
+    w = jax.random.normal(k2, (K, N), dtype)
+    out = gemm_pallas(x, w, bm=bm, bn=bn, bk=bk, interpret=True)
+    ref = R.gemm_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_gemm_ops_pads_ragged():
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (33, 70), jnp.float32)
+    w = jax.random.normal(k2, (70, 45), jnp.float32)
+    out = ops.gemm(x, w, backend="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) @ np.asarray(w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_autotile_respects_vmem():
+    t = gemm_tiles(8192, 8192, 8192, 2)
+    assert t.vmem_bytes <= 96 * 1024 * 1024 // 8 * 4
+    assert t.bm % 8 == 0 and t.bn % 128 == 0 and t.bk % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _attn_case(B, Hq, Hkv, Tq, Tk, D, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Tq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Tk, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Tk, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_gqa(Hq, Hkv):
+    q, k, v = _attn_case(2, Hq, Hkv, 64, 64, 32)
+    out = flash_attention_pallas(q, k, v, bq=16, bk=16, causal=True,
+                                 interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [None, 16, 32])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_flash_window_softcap(window, softcap):
+    q, k, v = _attn_case(1, 2, 2, 64, 64, 16)
+    out = flash_attention_pallas(q, k, v, bq=16, bk=16, causal=True,
+                                 window=window, softcap=softcap,
+                                 interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True, window=window,
+                          softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_noncausal(softcap=None):
+    q, k, v = _attn_case(1, 2, 2, 32, 64, 16)
+    out = flash_attention_pallas(q, k, v, bq=16, bk=16, causal=False,
+                                 interpret=True)
+    ref = R.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    q, k, v = _attn_case(1, 2, 2, 32, 32, 16, dtype=jnp.bfloat16)
+    out = flash_attention_pallas(q, k, v, bq=16, bk=16, causal=True,
+                                 interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_decode_matches_full_attention_last_row():
+    """Decode (q_len=1, offset=S−1) must equal the last row of full causal
+    attention over the same sequence."""
+    B, H, S, D = 2, 4, 48, 16
+    q, k, v = _attn_case(B, H, H, S, S, D, seed=3)
+    full = R.attention_ref(q, k, v, causal=True)
+    out = flash_attention_pallas(q[:, :, -1:], k, v, bq=1, bk=16,
+                                 causal=True, offset=S - 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]),
+                               np.asarray(full[:, :, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_ref_window():
+    B, H, S, D = 1, 2, 64, 16
+    q, k, v = _attn_case(B, H, H, 1, S, D, seed=5)
+    out = R.decode_attention_ref(q, k, v, window=16)
+    full = R.attention_ref(
+        jax.random.normal(jax.random.PRNGKey(9), (B, H, S, D)).at[:, :, -1:].set(q),
+        k, v, causal=True, window=16)
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]),
+                               np.asarray(full[:, :, -1]), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(tq=st.sampled_from([16, 32, 48]), tk=st.sampled_from([32, 64]),
+       bq=st.sampled_from([8, 16]), bk=st.sampled_from([16, 32]),
+       seed=st.integers(0, 50))
+def test_flash_property_tilings(tq, tk, bq, bk, seed):
+    q, k, v = _attn_case(1, 2, 1, tq, tk, 16, seed=seed)
+    out = flash_attention_pallas(q, k, v, bq=bq, bk=bk, causal=True,
+                                 interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSM scan
+# ---------------------------------------------------------------------------
+
+def _ssm_case(Bt, L, Dm, N, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (Bt, L, Dm), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, L, Dm)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (Dm, N)) * 0.5)
+    B = jax.random.normal(ks[3], (Bt, L, N), jnp.float32)
+    C = jax.random.normal(ks[4], (Bt, L, N), jnp.float32)
+    D = jnp.ones((Dm,), jnp.float32) * 0.5
+    return x, dt, A, B, C, D
+
+
+def test_ssm_scan_matches_sequential():
+    """The associative-scan oracle itself must match a plain sequential loop."""
+    x, dt, A, B, C, D = _ssm_case(2, 16, 8, 4)
+    y_ref, h_ref = R.selective_scan_ref(x, dt, A, B, C, D)
+    # sequential
+    h = np.zeros((2, 8, 4))
+    ys = []
+    xn, dtn, An, Bn, Cn = map(np.asarray, (x, dt, A, B, C))
+    for l in range(16):
+        dA = np.exp(dtn[:, l][..., None] * An[None])
+        h = dA * h + dtn[:, l][..., None] * Bn[:, l][:, None, :] * xn[:, l][..., None]
+        ys.append(np.einsum("bdn,bn->bd", h, Cn[:, l]) + xn[:, l] * 0.5)
+    y_seq = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_ref), y_seq, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_ref), h, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("Bt,L,Dm,N,bd,bl", [
+    (2, 32, 16, 8, 8, 16),
+    (1, 64, 8, 4, 8, 16),
+    (2, 16, 32, 16, 16, 8),
+])
+def test_ssm_pallas_vs_ref(Bt, L, Dm, N, bd, bl):
+    x, dt, A, B, C, D = _ssm_case(Bt, L, Dm, N, seed=7)
+    y, h = ssm_scan_pallas(x, dt, A, B, C, D, bd=bd, bl=bl, interpret=True)
+    y_ref, h_ref = R.selective_scan_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+def _rwkv_case(B, H, T, Dk, Dv, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (B, H, T, Dk), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, T, Dk), jnp.float32) * 0.3
+    v = jax.random.normal(ks[2], (B, H, T, Dv), jnp.float32)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, H, T, Dk)) + 2.0)
+    u = jax.random.normal(ks[4], (H, Dk), jnp.float32) * 0.1
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("T,bt", [(32, 8), (64, 16), (16, 16)])
+def test_rwkv6_pallas_vs_ref(T, bt):
+    r, k, v, w, u = _rwkv_case(2, 2, T, 8, 8, seed=1)
+    o, s = rwkv6_pallas(r, k, v, w, u, bt=bt, interpret=True)
+    o_ref, s_ref = R.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_state_handoff():
+    """Running two halves with state handoff == running the full sequence —
+    the invariant behind decode and sequence-parallel sharding."""
+    r, k, v, w, u = _rwkv_case(1, 2, 32, 8, 8, seed=2)
+    o_full, s_full = R.rwkv6_ref(r, k, v, w, u)
+    o1, s1 = R.rwkv6_ref(r[:, :, :16], k[:, :, :16], v[:, :, :16],
+                         w[:, :, :16], u)
+    o2, s2 = R.rwkv6_ref(r[:, :, 16:], k[:, :, 16:], v[:, :, 16:],
+                         w[:, :, 16:], u, s0=s1)
+    np.testing.assert_allclose(np.asarray(o_full[:, :, 16:]), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,183 @@
+"""Banking (Fig. 6) + dataflow fusion (§IV-C) + ADG assembly tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import workload as W
+from repro.core.adg import generate_adg
+from repro.core.dataflow import build_dataflow
+from repro.core.fusion import fuse_tensor, naive_merge, solve_dataflow
+from repro.core.interconnect import solve_delay, solve_direct
+from repro.core.memory import analyze_banking, fuse_banking
+
+
+def conv_ohow(P=3, kw_inner=True):
+    wl = W.conv2d()
+    inner = [("kh", 3), ("kw", 3)] if kw_inner else [("kw", 3), ("kh", 3)]
+    df = build_dataflow(
+        wl,
+        spatial=[("ow", P), ("oh", P)],
+        temporal=[("n", 1), ("ow", 1), ("oh", 1), ("oc", 2), ("ic", 2)] + inner,
+        c=(0, 0),
+        name="conv-ohow",
+    )
+    return wl, df
+
+
+def conv_icoc(Pic=4, Poc=4):
+    wl = W.conv2d()
+    df = build_dataflow(
+        wl,
+        spatial=[("ic", Pic), ("oc", Poc)],
+        temporal=[("n", 1), ("oc", 2), ("ic", 2), ("oh", 3), ("ow", 3),
+                  ("kh", 3), ("kw", 3)],
+        c=(1, 1),
+        name="conv-icoc",
+    )
+    return wl, df
+
+
+def _solve(wl, df, tensor, mem_cost=1.2):
+    reuses = solve_direct(wl, df, tensor) + solve_delay(wl, df, tensor)
+    return solve_dataflow(wl, df, tensor, reuses, mem_cost)
+
+
+class TestBanking:
+    def test_fig6a_three_banks(self):
+        wl, df = conv_ohow()
+        sol = _solve(wl, df, "X")
+        plan = analyze_banking(wl, df, "X", sol.data_nodes)
+        # Fig. 6(a): {Δd_IH} = {1,2}, {Δd_IW} = {0} → 3×1 banks on (ih, iw)
+        assert plan.banks_per_dim[2] == 3
+        assert plan.banks_per_dim[3] == 1
+        assert plan.total_banks == 3
+
+    def test_fig6b_2x2_banks(self):
+        wl, df = conv_ohow(P=2)
+        # all 4 FUs as data nodes (the Fig. 6(b) scenario)
+        plan = analyze_banking(wl, df, "X", [0, 1, 2, 3])
+        assert plan.banks_per_dim[2] == 2 and plan.banks_per_dim[3] == 2
+        assert plan.total_banks == 4
+
+    def test_fig6c_fusion_is_max(self):
+        wl, df3 = conv_ohow()
+        sol3 = _solve(wl, df3, "X")
+        p3 = analyze_banking(wl, df3, "X", sol3.data_nodes)
+        wl2, df2 = conv_ohow(P=2)
+        df2 = build_dataflow(wl2, spatial=[("ow", 2), ("oh", 2)],
+                             temporal=[("n", 1), ("ow", 1), ("oh", 1),
+                                       ("oc", 2), ("ic", 2), ("kh", 3), ("kw", 3)],
+                             c=(0, 0), name="conv-ohow-2")
+        p2 = analyze_banking(wl2, df2, "X", [0, 1, 2, 3])
+        fused = fuse_banking([p3, p2])
+        assert fused.total_banks == 4  # paper: 4 banks = 4×1 view and 2×2 view
+
+    def test_gcd_bank_reduction(self):
+        # data nodes with index deltas {2, 4} → gcd 2 → 4/2+1 = 3 banks
+        wl, df = conv_ohow()
+
+        class FakePlanInput:
+            pass
+
+        from repro.core.memory import BankingPlan
+        d = np.array([[0, 0, 0, 0], [0, 0, 2, 0], [0, 0, 4, 0]])
+        deltas = {2, 4}
+        # exercised through analyze_banking by picking FUs 0, 2 rows apart is
+        # not possible on this grid; test the arithmetic directly instead
+        from math import gcd
+        g = gcd(2, 4)
+        assert max(deltas) // g + 1 == 3
+
+    def test_no_conflict_property(self):
+        wl, df = conv_ohow()
+        sol = _solve(wl, df, "X")
+        plan = analyze_banking(wl, df, "X", sol.data_nodes)
+        seen = set()
+        for row in plan.data_node_indices:
+            b = plan.bank_of(row)
+            assert b not in seen
+            seen.add(b)
+
+
+class TestAddressGenerator:
+    def test_affine_address_matches_direct_eval(self):
+        wl, df = conv_ohow()
+        from repro.core.memory import address_generator
+        ag = address_generator(wl, df, "X", np.array([1, 2]))
+        for tflat in range(0, df.total_cycles, 7):
+            from repro.core.affine import mixed_radix_vector
+            t = mixed_radix_vector(tflat, df.R_T)
+            i = df.M_TI @ t + df.M_SI @ np.array([1, 2])
+            d_expect = wl.tensor("X").fmap(i)
+            np.testing.assert_array_equal(ag.data_index(t), d_expect)
+
+
+class TestFusion:
+    def test_fused_fewer_or_equal_links_than_naive(self):
+        wl, df_a = conv_ohow(P=4)
+        _, df_b = conv_icoc(Pic=4, Poc=4)
+        for tensor in ("X", "W", "Y"):
+            sols = [_solve(wl, df_a, tensor), _solve(wl, df_b, tensor)]
+            fused = fuse_tensor(sols)
+            naive = naive_merge(sols)
+            # §IV-C objective: fewer muxes AND fewer data nodes (switch
+            # ports are the expensive resource) — compare combined cost
+            cost_f = fused.n_links + 2 * len(fused.all_data_nodes)
+            cost_n = naive.n_links + 2 * len(naive.all_data_nodes)
+            assert cost_f <= cost_n
+            assert len(fused.all_data_nodes) <= len(naive.all_data_nodes)
+            # every dataflow must still be executable: each chain has a root
+            for dfn, roots in fused.chain_roots.items():
+                assert roots or fused.data_nodes[dfn]
+
+    def test_single_dataflow_fusion_matches_spanning(self):
+        wl, df = conv_ohow()
+        sol = _solve(wl, df, "W")
+        fused = fuse_tensor([sol])
+        # W is broadcast-shareable: a single chain → exactly one data node
+        assert len(fused.all_data_nodes) == 1
+
+
+class TestADG:
+    def test_generate_single_dataflow(self):
+        wl, df = conv_ohow()
+        adg = generate_adg([(wl, df)], name="t")
+        s = adg.summary()
+        assert s["n_fus"] == 9
+        assert set(adg.tensor_plans) == {"Y", "X", "W"}
+        assert s["banks"]["X"] >= 1
+        # Y in OH-OW has no spatial reuse → one data node per FU
+        assert len(adg.tensor_plans["Y"].all_data_nodes) == 9
+        # W broadcast: single data node
+        assert len(adg.tensor_plans["W"].all_data_nodes) == 1
+        # Y accumulator exists as stationary reuse
+        assert any(r.depth == 1 for r in adg.stationary[(df.name, "Y")])
+
+    def test_generate_fused_pair(self):
+        wl, df_a = conv_ohow(P=4)
+        _, df_b = conv_icoc()
+        adg = generate_adg([(wl, df_a), (wl, df_b)], name="mn-icoc")
+        assert adg.n_fus == 16
+        assert len(adg.dataflow_names) == 2
+        # fused design must provide data nodes for both dataflows on all tensors
+        for t, plan in adg.tensor_plans.items():
+            for dfn in adg.dataflow_names:
+                sol = adg.solutions[(dfn, t)]
+                covered = set(plan.data_nodes.get(dfn, [])) | {
+                    v for v, p in sol.parent.items() if p != sol.df.n_fus}
+                # every FU is either memory-fed or link-fed under each dataflow
+                reach = set(plan.data_nodes.get(dfn, []))
+                assert reach or covered
+
+    def test_gemm_tpu_adg(self):
+        wl = W.gemm()
+        df = build_dataflow(wl, spatial=[("k", 4), ("j", 4)],
+                            temporal=[("i", 2), ("j", 2), ("k", 2), ("i", 4)],
+                            c=(1, 1), name="gemm-jk")
+        adg = generate_adg([(wl, df)], name="tpu")
+        # X flows along s_j: 4 data nodes (one per s_k row)
+        assert len(adg.tensor_plans["X"].all_data_nodes) == 4
+        # Y reduces along s_k: data nodes at chain roots
+        assert len(adg.tensor_plans["Y"].all_data_nodes) == 4
+        # W: no spatial reuse → all 16 FUs are data nodes (weights preloaded)
+        assert len(adg.tensor_plans["W"].all_data_nodes) == 16
