@@ -1,0 +1,115 @@
+"""Design-space exploration CLI: sweep candidate accelerators over the model
+zoo, print the Pareto frontier, dump ``BENCH_dse.json``.
+
+Run:  python benchmarks/dse.py --space small
+      python benchmarks/dse.py --space large --strategy evolutionary
+
+Re-runs hit the persistent mapping cache (``.dse_mapping_cache.json`` next to
+the output file by default) and skip the mapper entirely for already-seen
+(design, layer) pairs, so a repeated sweep completes in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.configs import ARCH_IDS
+from repro.dse import (Evaluator, MappingCache, SPACES, format_frontier,
+                       format_scorecard, load_zoo, run_search,
+                       write_bench_json)
+from repro.dse.evaluate import DEFAULT_ZOO
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--space", default="small", choices=sorted(SPACES))
+    ap.add_argument("--configs", default=",".join(DEFAULT_ZOO),
+                    help="comma-separated repro.configs ids")
+    ap.add_argument("--nets", default="",
+                    help="also score benchmarks.nn_workloads networks "
+                         "(comma-separated, e.g. MobileNetV2,ResNet50) — "
+                         "conv workloads make fused dataflow sets earn "
+                         "their mux area")
+    ap.add_argument("--seq", type=int, default=512,
+                    help="prefill sequence length to score")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use smoke() configs instead of full()")
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto", "exhaustive", "evolutionary"])
+    ap.add_argument("--objective", default="cycles",
+                    choices=["cycles", "energy", "edp"],
+                    help="per-layer mapping-search objective")
+    ap.add_argument("--out", default=os.path.join(_ROOT, "BENCH_dse.json"))
+    ap.add_argument("--cache-path", default=None,
+                    help="mapping-cache JSON (default: next to --out)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the persistent mapping cache")
+    ap.add_argument("--top", type=int, default=12,
+                    help="scorecard rows to print")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    space = SPACES[args.space]
+    configs = [c for c in args.configs.split(",") if c]
+    log = (lambda m: None) if args.quiet else (
+        lambda m: print(f"  {m}", flush=True))
+
+    print(f"== DSE sweep: space={space.name} "
+          f"({space.raw_size} raw points), zoo={configs} ==")
+    try:
+        zoo = load_zoo(configs, seq=args.seq, batch=args.batch,
+                       reduced=args.reduced)
+    except ModuleNotFoundError as e:
+        ap.error(f"unknown config in --configs ({e.name}); "
+                 f"known ids: {', '.join(ARCH_IDS)}")
+    if args.nets:
+        from benchmarks.nn_workloads import NETWORKS
+        for net in args.nets.split(","):
+            if net not in NETWORKS:
+                ap.error(f"unknown net {net!r}; known: "
+                         f"{', '.join(sorted(NETWORKS))}")
+            zoo[net] = NETWORKS[net]()
+    n_layers = sum(len(v) for v in zoo.values())
+    print(f"  lowered {len(zoo)} configs -> {n_layers} unique layer shapes")
+
+    cache_path = None
+    if not args.no_cache:
+        cache_path = args.cache_path or os.path.join(
+            os.path.dirname(os.path.abspath(args.out)),
+            ".dse_mapping_cache.json")
+    cache = MappingCache(cache_path)
+    if len(cache):
+        print(f"  mapping cache: {len(cache)} entries from {cache_path}")
+
+    evaluator = Evaluator(zoo=zoo, cache=cache, objective=args.objective)
+    result = run_search(space, evaluator, strategy=args.strategy, log=log)
+    cache.save()
+
+    print()
+    print(format_scorecard(result.evals, limit=args.top))
+    print()
+    print(format_frontier(result))
+
+    wall = time.perf_counter() - t0
+    meta = {"configs": configs, "seq": args.seq, "batch": args.batch,
+            "objective": args.objective, "total_wall_s": wall}
+    write_bench_json(args.out, result, meta=meta)
+    cs = result.cache_stats
+    print(f"\nswept {result.n_designs} designs x {len(zoo)} configs in "
+          f"{wall:.1f}s (mapper cache: {cs['hits']} hits / "
+          f"{cs['misses']} misses); wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

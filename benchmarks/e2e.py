@@ -7,9 +7,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core import workload as W
-from repro.core.baselines import GEMMINI_HW, gemmini_layer_perf
-from repro.core.mapper import SpatialChoice, best_mapping
-from repro.core.perf_model import HWConfig, layer_perf
+from repro.core.baselines import gemmini_layer_perf
+from repro.core.fusion import data_node_pressure, score_fused_design
+from repro.core.mapper import SpatialChoice
+from repro.core.perf_model import HWConfig
 
 from .designs import build_design
 from .nn_workloads import NETWORKS
@@ -54,34 +55,26 @@ class NetResult:
 
 
 def lego_data_nodes(design_name: str = "Conv2d-MNICOC") -> dict[str, int]:
-    """Bank-port pressure per tensor = data nodes of the *active* dataflow
-    (only one dataflow runs at a time; the union across dataflows would
-    double-charge the fused design's scratchpad energy)."""
-    adg = build_design(design_name)
-    out = {}
-    for t, plan in adg.tensor_plans.items():
-        per_df = [len(v) for v in plan.data_nodes.values() if v]
-        out[t] = max(1, min(per_df) if per_df else len(plan.all_data_nodes))
-    return out
+    """Exact per-tensor data-node counts from a generated ADG (see
+    :func:`repro.core.fusion.data_node_pressure`)."""
+    return data_node_pressure(build_design(design_name).tensor_plans)
 
 
 def run_network_lego(net: str, hw: HWConfig = LEGO_HW,
                      restrict: str | None = None) -> NetResult:
     """restrict: force a single spatial dataflow name (Table V ablation)."""
-    layers = NETWORKS[net]()
     dn = lego_data_nodes()
-    cyc = en = macs = ppu = 0.0
-    for kind, dims, rep, nt in layers:
+    spatials = {}
+    layers = []
+    for kind, dims, rep, nt in NETWORKS[net]():
+        wl = _WL[kind]
         sps = _SP[kind]
         if restrict:
             sps = [s for s in sps if s.name == restrict] or sps
-        m = best_mapping(_WL[kind], dims, sps, hw,
-                         data_nodes_per_tensor=dn, ppu_elements=nt)
-        cyc += rep * m.perf.cycles
-        en += rep * m.perf.energy_pj
-        macs += rep * m.perf.macs
-        ppu += rep * m.perf.ppu_cycles
-    return NetResult(net, cyc, en, macs, ppu)
+        spatials[wl.name] = sps
+        layers.append((wl, dims, rep, nt))
+    s = score_fused_design(layers, spatials, hw, data_nodes_per_tensor=dn)
+    return NetResult(net, s.cycles, s.energy_pj, s.macs, s.ppu_cycles)
 
 
 def run_network_gemmini(net: str) -> NetResult:

@@ -341,6 +341,53 @@ def instr_overhead():
 # kernel micro-bench (CPU ref-path wall time; Pallas kernels target TPU)
 # ---------------------------------------------------------------------------
 
+def mapper_micro():
+    """Memoization of the mapper's pure enumeration helpers (factor_pairs,
+    dataflow construction): unmemoized body vs lru_cache hit."""
+    from repro.core import dataflow as DF
+    from repro.core import mapper as M
+    from repro.core import workload as W
+
+    # enumeration helpers in isolation: unmemoized body vs lru_cache hit
+    def fp_raw():
+        for _ in range(2000):
+            M.factor_pairs.__wrapped__(4096)
+
+    def fp_cached():
+        for _ in range(2000):
+            M.factor_pairs(4096)
+
+    us_fp_raw, _ = _timed(fp_raw)
+    M.factor_pairs(4096)  # prime
+    us_fp_hit, _ = _timed(fp_cached)
+    _emit("micro.factor_pairs_2000x", us_fp_hit,
+          f"unmemoized_us={us_fp_raw:.0f};memoized_us={us_fp_hit:.0f};"
+          f"speedup={us_fp_raw / max(1.0, us_fp_hit):.1f}x")
+
+    wl_conv = W.conv2d()
+
+    def df_raw():
+        for _ in range(200):
+            DF._cached_dataflow.__wrapped__(
+                wl_conv.iter_dims, (("ic", 16), ("oc", 16)),
+                (("n", 1), ("oc", 2), ("ic", 2), ("oh", 8), ("ow", 8),
+                 ("kh", 3), ("kw", 3)), (1, 1), "icoc")
+
+    def df_cached():
+        for _ in range(200):
+            DF.build_dataflow(
+                wl_conv, spatial=[("ic", 16), ("oc", 16)],
+                temporal=[("n", 1), ("oc", 2), ("ic", 2), ("oh", 8),
+                          ("ow", 8), ("kh", 3), ("kw", 3)],
+                c=(1, 1), name="icoc")
+
+    us_df_raw, _ = _timed(df_raw)
+    us_df_hit, _ = _timed(df_cached)
+    _emit("micro.build_dataflow_200x", us_df_hit,
+          f"unmemoized_us={us_df_raw:.0f};memoized_us={us_df_hit:.0f};"
+          f"speedup={us_df_raw / max(1.0, us_df_hit):.1f}x")
+
+
 def kernel_micro():
     import jax
     import jax.numpy as jnp
@@ -361,15 +408,19 @@ def kernel_micro():
 ALL = [fig10_backend_opts, fig11_e2e, fig12_breakdown,
        fig13_14_backend_breakdown, table2_genai, table3_handwritten,
        table4_scaling, table5_fusion, table6_related, instr_overhead,
-       kernel_micro]
+       mapper_micro, kernel_micro]
+
+QUICK = [mapper_micro]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="micro-benchmarks only (seconds, not minutes)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in QUICK if args.quick else ALL:
         if args.only and args.only not in fn.__name__:
             continue
         try:

@@ -3,29 +3,60 @@ accelerator → per-layer mapping search → latency/energy report vs the
 Gemmini baseline (Fig. 11 in miniature), plus the generated design's
 area/power breakdown (Fig. 12).
 
+The accelerator can be the paper's hand-picked LEGO-MNICOC (default) or a
+DSE-selected design: run ``python benchmarks/dse.py --space small`` first,
+then pass ``--dse BENCH_dse.json [--pick cycles|energy|area|edp]`` to score
+the frontier-best configuration instead — mapped with its own dataflow set
+and the same closed-form area/power model the sweep used, so the numbers
+printed here agree with the frontier entry it was picked from.
+
 Run:  PYTHONPATH=src python examples/generate_accelerator.py [--net MobileNetV2]
+      PYTHONPATH=src python examples/generate_accelerator.py --dse BENCH_dse.json
 """
 
 import argparse
+import json
+import os
 import sys
 import time
 
 sys.path.insert(0, ".")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
 
 from benchmarks.designs import build_design
 from benchmarks.e2e import run_network_gemmini, run_network_lego
+from benchmarks.nn_workloads import NETWORKS
 from repro.core.cost import design_area_mm2, design_power_mw
 from repro.core.dag import codegen
 from repro.core.passes import run_backend
+from repro.dse import DesignPoint, Evaluator, MappingCache
+
+# which generated ADG realizes each DSE dataflow set (conv family shown in
+# the Fig. 12-style interconnect demo; GEMM menus share the same class)
+_SET_TO_DESIGN = {"os": "Conv2d-OHOW", "ws": "Conv2d-ICOC",
+                  "switch": "Conv2d-MNICOC"}
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--net", default="MobileNetV2")
-    args = ap.parse_args()
+def pick_dse_design(path: str, objective: str) -> DesignPoint:
+    """Frontier design from ``BENCH_dse.json`` minimizing ``objective``."""
+    with open(path) as f:
+        bench = json.load(f)
+    frontier = bench["frontier"] or bench["designs"]
+    keyfn = {"cycles": lambda e: e["cycles"],
+             "energy": lambda e: e["energy_pj"],
+             "area": lambda e: e["area_mm2"],
+             "edp": lambda e: e["cycles"] * e["energy_pj"]}[objective]
+    d = min(frontier, key=keyfn)["design"]
+    return DesignPoint(n_fus=d["n_fus"], buffer_kb=d["buffer_kb"],
+                       dram_gbps=d["dram_gbps"],
+                       dataflow_set=d["dataflow_set"])
 
+
+def run_paper_design(net: str) -> None:
+    """The original Fig. 11/12 miniature: LEGO-MNICOC at 256 FUs."""
     t0 = time.time()
-    print(f"== generating LEGO-MNICOC (256 FUs, fused OH-OW + IC-OC) ==")
+    print("== generating LEGO-MNICOC (256 FUs, fused OH-OW + IC-OC) ==")
     adg = build_design("Conv2d-MNICOC")
     dag = codegen(adg)
     run_backend(dag)
@@ -38,15 +69,64 @@ def main():
           f"(buffers {100*area['buffers']/area['total_mm2']/1e6:.0f}%), "
           f"power {power['total_mw']:.0f} mW")
 
-    print(f"== mapping {args.net} ==")
-    lego = run_network_lego(args.net)
-    gem = run_network_gemmini(args.net)
+    print(f"== mapping {net} ==")
+    lego = run_network_lego(net)
+    gem = run_network_gemmini(net)
     print(f"  LEGO   : {lego.cycles/1e6:.2f} Mcycles, "
           f"{lego.gops:.0f} GOP/s, {lego.gops_per_w:.0f} GOP/s/W")
     print(f"  Gemmini: {gem.cycles/1e6:.2f} Mcycles, {gem.gops:.0f} GOP/s")
     print(f"  speedup {gem.cycles/lego.cycles:.2f}x, "
           f"energy saving {gem.energy_pj/lego.energy_pj:.2f}x "
           f"(paper average: 3.2x / 2.4x)")
+
+
+def run_dse_design(point: DesignPoint, net: str, pick: str) -> None:
+    """Score a DSE-picked design on ``net`` the way the sweep scored it:
+    its own dataflow set, √N data-node estimate, closed-form area/power."""
+    print(f"== DSE pick (min {pick}): {point.name} ==")
+    print(f"  {point.n_fus} FUs, {point.buffer_kb} KB buffers, "
+          f"{point.dram_gbps:g} GB/s, dataflow set {point.dataflow_set!r}")
+
+    t0 = time.time()
+    design_name = _SET_TO_DESIGN[point.dataflow_set]
+    print(f"== generating {design_name} interconnect "
+          f"(16x16 demo of the {point.dataflow_set!r} wiring class) ==")
+    adg = build_design(design_name)
+    dag = codegen(adg)
+    run_backend(dag)
+    print(f"  generation time: {time.time()-t0:.1f}s "
+          f"(paper: 28.7s at 256 FUs)")
+
+    e = Evaluator(zoo={net: NETWORKS[net]()},
+                  cache=MappingCache()).evaluate(point)
+    gem = run_network_gemmini(net)
+    print(f"== mapping {net} on {point.name} ==")
+    print(f"  est. area {e.area_mm2:.2f} mm2, power {e.power_mw:.0f} mW "
+          f"(closed-form, as in BENCH_dse.json)")
+    print(f"  LEGO   : {e.cycles/1e6:.2f} Mcycles, {e.gops:.0f} GOP/s")
+    print(f"  Gemmini: {gem.cycles/1e6:.2f} Mcycles, {gem.gops:.0f} GOP/s")
+    print(f"  speedup {gem.cycles/e.cycles:.2f}x, "
+          f"energy saving {gem.energy_pj/e.energy_pj:.2f}x")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default="MobileNetV2")
+    ap.add_argument("--dse", default=None, metavar="BENCH_dse.json",
+                    help="take the accelerator config from a DSE sweep")
+    ap.add_argument("--pick", default="cycles",
+                    choices=["cycles", "energy", "area", "edp"],
+                    help="frontier objective to minimize (with --dse)")
+    args = ap.parse_args()
+
+    if args.dse:
+        if not os.path.exists(args.dse):
+            sys.exit(f"error: {args.dse} not found — run "
+                     f"`python benchmarks/dse.py --space small` first")
+        run_dse_design(pick_dse_design(args.dse, args.pick), args.net,
+                       args.pick)
+    else:
+        run_paper_design(args.net)
 
 
 if __name__ == "__main__":

@@ -23,7 +23,8 @@ from .dag import DAG
 __all__ = ["AreaBreakdown", "PowerBreakdown", "dag_area_um2", "dag_power_mw",
            "sram_area_um2", "sram_read_pj_per_byte", "DRAM_PJ_PER_BYTE",
            "design_area_mm2", "design_power_mw", "noc_area_um2",
-           "noc_power_mw", "ppu_area_um2", "ppu_power_mw"]
+           "noc_power_mw", "ppu_area_um2", "ppu_power_mw",
+           "estimate_design_area_mm2", "estimate_design_power_mw"]
 
 # -- primitive area (µm², TSMC 28 nm class) ----------------------------------
 A_MUL_PER_BIT2 = 5.5          # multiplier ~ 5.5 · b² (8×8 ≈ 350 µm²)
@@ -213,6 +214,61 @@ def design_area_mm2(dag: DAG, buffer_bytes: int, banks: int,
     }
     parts["total_mm2"] = sum(parts.values()) / 1e6
     parts["fu_breakdown"] = a.as_dict()
+    return parts
+
+
+# -- closed-form design estimators (no DAG required) --------------------------
+#
+# The DSE sweep scores hundreds of candidate designs; generating the full ADG
+# and running the back end for each (~10 s at 256 FUs) would dominate the
+# sweep, so the area/power axes of the Pareto frontier use a closed-form
+# estimate instead.  Constants are calibrated against the DAG-based model for
+# the paper's two anchor designs (LEGO-MNICOC 256 FUs fused ≈ 1.8–2.0 mm²,
+# LEGO-ICOC-1K 1024 FUs ≈ 4 mm²): each FU carries a MAC + accumulator +
+# pipeline/skew registers, and every additional runtime-switchable dataflow
+# adds mux/FIFO/data-node overhead per FU (§IV-C fusion hardware).
+
+FU_AREA_UM2 = 1150.0              # MAC + acc + regs + share of links
+FU_AREA_PER_EXTRA_DF_UM2 = 280.0  # muxes + shared FIFOs + extra data nodes
+FU_POWER_MW = 0.78                # active per-FU power incl. link traffic
+FU_POWER_PER_EXTRA_DF_MW = 0.07
+
+
+def estimate_design_area_mm2(n_fus: int, buffer_bytes: int,
+                             n_dataflows: int = 1, n_ppus: int = 8,
+                             banks: int = 16) -> dict:
+    """Closed-form analogue of :func:`design_area_mm2` for DSE scoring."""
+    fu = n_fus * (FU_AREA_UM2
+                  + FU_AREA_PER_EXTRA_DF_UM2 * max(0, n_dataflows - 1))
+    n_ep = max(8, int(np.sqrt(n_fus)))
+    parts = {
+        "fu_array": fu,
+        "buffers": sram_area_um2(buffer_bytes, banks),
+        "noc": noc_area_um2(n_ep),
+        "ppu": ppu_area_um2(n_ppus),
+    }
+    parts["total_mm2"] = sum(parts.values()) / 1e6
+    return parts
+
+
+def estimate_design_power_mw(n_fus: int, buffer_bytes: int,
+                             n_dataflows: int = 1, n_ppus: int = 8,
+                             sram_bytes_per_cycle: float | None = None) -> dict:
+    """Closed-form analogue of :func:`design_power_mw` for DSE scoring."""
+    fu = n_fus * (FU_POWER_MW
+                  + FU_POWER_PER_EXTRA_DF_MW * max(0, n_dataflows - 1))
+    n_ep = max(8, int(np.sqrt(n_fus)))
+    if sram_bytes_per_cycle is None:
+        # LEGO interconnects feed the array from O(√N) data nodes, not N edges
+        sram_bytes_per_cycle = 4.0 * np.sqrt(n_fus)
+    sram_mw = sram_read_pj_per_byte(buffer_bytes) * sram_bytes_per_cycle * FREQ_GHZ
+    parts = {
+        "fu_array": fu,
+        "buffers": sram_mw,
+        "noc": noc_power_mw(n_ep),
+        "ppu": ppu_power_mw(n_ppus),
+    }
+    parts["total_mw"] = sum(parts.values())
     return parts
 
 

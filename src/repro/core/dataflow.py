@@ -17,6 +17,7 @@ Fig. 3 (``j = P_j*t0_j + s_j``, ``i = R0_i*t1_i + t0_i``).
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
@@ -145,7 +146,29 @@ def build_dataflow(
     Strides: spatial tile is the innermost tile of its dim (stride 1); each
     temporal tile's stride is the product of all tile sizes below it for the
     same dim (spatial included).
+
+    Construction is pure in (iter_dims, spatial, temporal, c, name), so the
+    result is memoized — the mapper rebuilds the same candidate dataflows for
+    every layer of a network and every design of a DSE sweep.  The returned
+    :class:`Dataflow` is frozen; callers share one instance.
     """
+    return _cached_dataflow(
+        tuple(wl.iter_dims),
+        tuple((d, int(p)) for d, p in spatial),
+        tuple((d, int(r)) for d, r in temporal),
+        tuple(int(x) for x in c),
+        name,
+    )
+
+
+@functools.lru_cache(maxsize=65536)
+def _cached_dataflow(
+    iter_dims: tuple[str, ...],
+    spatial: tuple[tuple[str, int], ...],
+    temporal: tuple[tuple[str, int], ...],
+    c: tuple[int, ...],
+    name: str,
+) -> Dataflow:
     spatial_size = {d: p for d, p in spatial}
     assert len(spatial_size) == len(spatial), "duplicate spatial dim"
 
@@ -165,7 +188,7 @@ def build_dataflow(
 
     df = Dataflow(
         name=name or ("sp-" + "".join(d for d, _ in spatial)),
-        iter_dims=wl.iter_dims,
+        iter_dims=iter_dims,
         temporal=t_loops,
         spatial=s_loops,
         c=np.asarray(c, dtype=np.int64),

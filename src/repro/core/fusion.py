@@ -36,7 +36,9 @@ from .spanning import spanning_interconnect
 from .workload import Workload
 
 __all__ = ["PhysicalLink", "FusedTensorPlan", "DataflowSolution",
-           "solve_dataflow", "fuse_tensor", "naive_merge"]
+           "solve_dataflow", "fuse_tensor", "naive_merge",
+           "data_node_pressure", "estimate_data_nodes",
+           "DesignScore", "score_fused_design"]
 
 
 @dataclass
@@ -303,6 +305,107 @@ def fuse_tensor(solutions: list[DataflowSolution]) -> FusedTensorPlan:
         out_roots[dfn] = sorted(set(roots))
 
     return FusedTensorPlan(tensor, links, out_data_nodes, out_roots)
+
+
+# ---------------------------------------------------------------------------
+# design-level scoring (reusable by benchmarks/e2e.py and repro.dse)
+# ---------------------------------------------------------------------------
+
+def data_node_pressure(tensor_plans: dict[str, FusedTensorPlan]) -> dict[str, int]:
+    """Bank-port pressure per tensor = data nodes of the *active* dataflow.
+
+    Only one dataflow runs at a time; the union across dataflows would
+    double-charge the fused design's scratchpad energy.
+    """
+    out: dict[str, int] = {}
+    for t, plan in tensor_plans.items():
+        per_df = [len(v) for v in plan.data_nodes.values() if v]
+        out[t] = max(1, min(per_df) if per_df else len(plan.all_data_nodes))
+    return out
+
+
+def estimate_data_nodes(n_fus: int, tensor_names: list[str] | tuple[str, ...]
+                        ) -> dict[str, int]:
+    """Analytic proxy for :func:`data_node_pressure` when no ADG is built.
+
+    LEGO's interconnection generation feeds a P×P array from one edge of data
+    nodes per tensor (O(√N)), not from every FU — the property that makes its
+    scratchpad power beat edge-fed arrays (Table III).  DSE sweeps score
+    hundreds of candidates and cannot afford full ADG generation per point,
+    so they use this √N estimate.
+    """
+    per_tensor = max(1, int(np.sqrt(n_fus)))
+    return {t: per_tensor for t in tensor_names}
+
+
+@dataclass
+class DesignScore:
+    """Aggregate of one design evaluated across a list of layer workloads."""
+
+    cycles: float = 0.0
+    energy_pj: float = 0.0
+    macs: float = 0.0
+    ppu_cycles: float = 0.0
+    n_layers: int = 0
+
+    @property
+    def gops(self) -> float:
+        return 2.0 * self.macs / max(1.0, self.cycles)
+
+    @property
+    def gops_per_w(self) -> float:
+        mw = self.energy_pj / max(1.0, self.cycles)
+        return self.gops / (mw / 1e3)
+
+    def add(self, rep: float, cycles: float, energy_pj: float, macs: float,
+            ppu_cycles: float = 0.0) -> None:
+        self.cycles += rep * cycles
+        self.energy_pj += rep * energy_pj
+        self.macs += rep * macs
+        self.ppu_cycles += rep * ppu_cycles
+        self.n_layers += 1
+
+
+def score_fused_design(
+    layers,
+    spatials,
+    hw,
+    *,
+    data_nodes_per_tensor: dict[str, int] | None = None,
+    objective: str = "cycles",
+    mapping_fn=None,
+) -> DesignScore:
+    """Map every layer of ``layers`` onto one fused design and aggregate.
+
+    ``layers``: iterable of ``(workload, dims, repeat, ppu_elements)``.
+    ``spatials``: the design's runtime-switchable spatial dataflows — either a
+    flat ``list[SpatialChoice]`` applied to every layer or a
+    ``dict[workload_name, list[SpatialChoice]]``.
+    ``mapping_fn(wl, dims, sps, hw, data_nodes_per_tensor, ppu_elements,
+    objective)`` overrides the mapper call — the DSE engine injects its
+    persistent-cache wrapper here.
+
+    This is the paper's "one generated architecture serves diverse models"
+    scoring loop, previously private wiring inside ``benchmarks/e2e.py``.
+    """
+    from .mapper import best_mapping
+
+    if mapping_fn is None:
+        def mapping_fn(wl, dims, sps, hw, dn, ppu, obj):
+            m = best_mapping(wl, dims, sps, hw, data_nodes_per_tensor=dn,
+                             ppu_elements=ppu, objective=obj)
+            return m.perf
+
+    score = DesignScore()
+    for wl, dims, rep, ppu_elements in layers:
+        sps = spatials[wl.name] if isinstance(spatials, dict) else spatials
+        dn = data_nodes_per_tensor
+        if dn is None:
+            dn = estimate_data_nodes(hw.n_fus, [t.name for t in wl.tensors])
+        perf = mapping_fn(wl, dims, sps, hw, dn, ppu_elements, objective)
+        score.add(rep, perf.cycles, perf.energy_pj, perf.macs,
+                  perf.ppu_cycles)
+    return score
 
 
 def naive_merge(solutions: list[DataflowSolution]) -> FusedTensorPlan:

@@ -11,6 +11,7 @@ as tie-break).
 
 from __future__ import annotations
 
+import functools
 import itertools
 from dataclasses import dataclass
 
@@ -39,7 +40,8 @@ class Mapping:
     spatial: SpatialChoice
 
 
-def factor_pairs(n: int, max_ratio: int = 16) -> list[tuple[int, int]]:
+@functools.lru_cache(maxsize=None)
+def factor_pairs(n: int, max_ratio: int = 16) -> tuple[tuple[int, int], ...]:
     out = []
     for a in range(1, int(np.sqrt(n)) + 1):
         if n % a == 0:
@@ -48,27 +50,26 @@ def factor_pairs(n: int, max_ratio: int = 16) -> list[tuple[int, int]]:
                 out.append((a, b))
                 if a != b:
                     out.append((b, a))
-    return out or [(1, n), (n, 1)]
+    return tuple(out) or ((1, n), (n, 1))
 
 
 def _ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def _tile_candidates(r: int) -> list[int]:
+@functools.lru_cache(maxsize=None)
+def _tile_candidates(r: int) -> tuple[int, ...]:
     """Candidate inner-tile sizes for a loop of trip count r."""
     cands = {1, r}
     for t in (2, 4, 8, 16, 32, 64):
         if t < r:
             cands.add(t)
-    return sorted(cands)
+    return tuple(sorted(cands))
 
 
-def _orders(dims: list[str], wl: Workload, max_orders: int = 8) -> list[list[str]]:
-    """Canonical temporal loop orders: reduction dims innermost (streaming
-    weights / accumulating in place) and output dims innermost variants."""
-    out_dims = {wl.iter_dims[i]
-                for i in np.nonzero(wl.output.fmap.M.any(axis=0))[0]}
+@functools.lru_cache(maxsize=None)
+def _orders_cached(dims: tuple[str, ...], out_dims: frozenset,
+                   max_orders: int = 8) -> tuple[tuple[str, ...], ...]:
     red = [d for d in dims if d not in out_dims]
     nonred = [d for d in dims if d in out_dims]
     orders = []
@@ -85,7 +86,20 @@ def _orders(dims: list[str], wl: Workload, max_orders: int = 8) -> list[list[str
     for o in orders:
         if o not in dedup:
             dedup.append(o)
-    return dedup[:max_orders]
+    return tuple(tuple(o) for o in dedup[:max_orders])
+
+
+def workload_out_dims(wl: Workload) -> frozenset:
+    """Iteration dims the output tensor depends on (non-reduction dims)."""
+    return frozenset(wl.iter_dims[i]
+                     for i in np.nonzero(wl.output.fmap.M.any(axis=0))[0])
+
+
+def _orders(dims: list[str], wl: Workload, max_orders: int = 8) -> list[list[str]]:
+    """Canonical temporal loop orders: reduction dims innermost (streaming
+    weights / accumulating in place) and output dims innermost variants."""
+    return [list(o) for o in
+            _orders_cached(tuple(dims), workload_out_dims(wl), max_orders)]
 
 
 def best_mapping(

@@ -20,7 +20,7 @@ Table III).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 
 import numpy as np
 
@@ -49,6 +49,14 @@ class HWConfig:
     def bytes_per_cycle(self) -> float:
         return self.dram_gbps / self.freq_ghz
 
+    def as_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+    def signature(self) -> tuple:
+        """Stable content key over every field that affects mapping/perf —
+        used by the DSE persistent mapping cache."""
+        return tuple(sorted(self.as_dict().items()))
+
 
 @dataclass
 class LayerPerf:
@@ -65,6 +73,14 @@ class LayerPerf:
     def gops(self) -> float:
         # 2 ops per MAC, at 1 GHz (cycles == ns)
         return 2.0 * self.macs / max(1.0, self.cycles)
+
+    def as_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LayerPerf":
+        names = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
 
 
 def _extent(df: Dataflow, dim: str, level: int) -> int:

@@ -1,0 +1,25 @@
+"""Design-space exploration engine (paper direction: "generate one
+architecture for diverse modern foundation models").
+
+``space``     — declarative :class:`DesignSpace` over candidate ``HWConfig``s
+``evaluate``  — lower every model config to layer workloads, score each design
+``cache``     — content-hashed persistent mapping cache (JSON on disk)
+``search``    — Pareto frontier + exhaustive / evolutionary strategies
+``report``    — frontier pretty-printer and ``BENCH_dse.json`` writer
+"""
+
+from .cache import MappingCache
+from .evaluate import DesignEval, Evaluator, load_zoo, lower_config
+from .report import format_frontier, format_scorecard, write_bench_json
+from .search import (SearchResult, dominates, evolutionary_search,
+                     exhaustive_search, pareto_frontier, run_search)
+from .space import DATAFLOW_SETS, SPACES, DesignPoint, DesignSpace
+
+__all__ = [
+    "DesignPoint", "DesignSpace", "SPACES", "DATAFLOW_SETS",
+    "MappingCache",
+    "Evaluator", "DesignEval", "load_zoo", "lower_config",
+    "pareto_frontier", "dominates", "exhaustive_search",
+    "evolutionary_search", "run_search", "SearchResult",
+    "format_frontier", "format_scorecard", "write_bench_json",
+]

@@ -1,0 +1,162 @@
+"""Content-hashed persistent mapping cache.
+
+The mapper is the DSE hot path: ``best_mapping`` enumerates spatial
+factorizations × tile splits × loop orders per layer, and a sweep evaluates
+every (design, layer) pair.  Layer shapes repeat heavily — across the layers
+of one model, across models sharing a ``d_model``, and across sweep re-runs —
+so mapping results are cached under a content hash of *everything that
+determines the result*: workload name, true dims, the spatial-dataflow menu,
+the full ``HWConfig``, data-node counts, PPU elements and the objective.
+
+The store is a single JSON file; ``save`` writes atomically (temp file +
+rename) so an interrupted sweep never corrupts it.  Entries hold the
+:class:`~repro.core.perf_model.LayerPerf` numbers plus the winning spatial
+dataflow name — everything the evaluator aggregates — not the ``Dataflow``
+object itself, which is cheap to rebuild on demand.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+
+from repro.core.mapper import Mapping, SpatialChoice, best_mapping
+from repro.core.perf_model import HWConfig, LayerPerf
+from repro.core.workload import Workload
+
+__all__ = ["MappingCache", "mapping_key", "atomic_write_json"]
+
+_SCHEMA = 1  # bump to invalidate stale caches when the perf model changes
+
+
+def atomic_write_json(path: str, payload, **dump_kw) -> None:
+    """Write JSON via temp file + rename so readers never see a torn file."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, **dump_kw)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def mapping_key(wl: Workload, dims: dict[str, int],
+                spatials: list[SpatialChoice], hw: HWConfig,
+                data_nodes_per_tensor: dict[str, int] | None,
+                ppu_elements: float, objective: str) -> str:
+    """Stable content hash of one mapping query."""
+    payload = {
+        "schema": _SCHEMA,
+        "workload": wl.name,
+        "iter_dims": list(wl.iter_dims),
+        "dims": sorted(dims.items()),
+        "spatials": [[list(s.dims), list(s.c), s.name] for s in spatials],
+        "hw": [[k, v] for k, v in hw.signature()],
+        "data_nodes": sorted((data_nodes_per_tensor or {}).items()),
+        "ppu_elements": float(ppu_elements),
+        "objective": objective,
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+class MappingCache:
+    """Dict-backed cache with optional JSON persistence."""
+
+    def __init__(self, path: str | os.PathLike | None = None,
+                 autoload: bool = True):
+        self.path = os.fspath(path) if path is not None else None
+        self._store: dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        self._dirty = False
+        if autoload and self.path and os.path.exists(self.path):
+            self.load()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    # -- persistence ------------------------------------------------------
+    def load(self, path: str | None = None) -> int:
+        path = path or self.path
+        if not path or not os.path.exists(path):
+            return 0
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return 0  # unreadable cache == cold cache, never fatal
+        if payload.get("schema") != _SCHEMA:
+            return 0
+        self._store.update(payload.get("entries", {}))
+        return len(self._store)
+
+    def save(self, path: str | None = None) -> None:
+        path = path or self.path
+        if not path or not self._dirty:
+            return
+        atomic_write_json(path, {"schema": _SCHEMA, "entries": self._store},
+                          separators=(",", ":"))
+        self._dirty = False
+
+    # -- raw access -------------------------------------------------------
+    def get(self, key: str) -> dict | None:
+        e = self._store.get(key)
+        if e is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return e
+
+    def put(self, key: str, value: dict) -> None:
+        self._store[key] = value
+        self._dirty = True
+
+    @property
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"entries": len(self._store), "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0}
+
+    # -- mapper front door -------------------------------------------------
+    def best_mapping_perf(self, wl: Workload, dims: dict[str, int],
+                          spatials: list[SpatialChoice], hw: HWConfig,
+                          data_nodes_per_tensor: dict[str, int] | None = None,
+                          ppu_elements: float = 0.0,
+                          objective: str = "cycles") -> LayerPerf:
+        """Cached ``best_mapping`` returning the winning :class:`LayerPerf`.
+
+        The entry also records the winning spatial-dataflow name, retrievable
+        via :meth:`lookup_spatial`.
+        """
+        key = mapping_key(wl, dims, spatials, hw, data_nodes_per_tensor,
+                          ppu_elements, objective)
+        e = self.get(key)
+        if e is not None:
+            return LayerPerf.from_dict(e["perf"])
+        m: Mapping = best_mapping(
+            wl, dims, spatials, hw,
+            data_nodes_per_tensor=data_nodes_per_tensor,
+            ppu_elements=ppu_elements, objective=objective)
+        self.put(key, {"perf": m.perf.as_dict(),
+                       "spatial": m.spatial.name,
+                       "dataflow": m.dataflow.name})
+        return m.perf
+
+    def lookup_spatial(self, wl: Workload, dims: dict[str, int],
+                       spatials: list[SpatialChoice], hw: HWConfig,
+                       data_nodes_per_tensor: dict[str, int] | None = None,
+                       ppu_elements: float = 0.0,
+                       objective: str = "cycles") -> str | None:
+        """Winning spatial-dataflow name for a query already in the cache."""
+        key = mapping_key(wl, dims, spatials, hw, data_nodes_per_tensor,
+                          ppu_elements, objective)
+        e = self._store.get(key)
+        return e["spatial"] if e else None

@@ -1,0 +1,62 @@
+"""Frontier reporting: terminal tables + ``BENCH_dse.json``."""
+
+from __future__ import annotations
+
+from .cache import atomic_write_json
+from .evaluate import DesignEval
+from .search import SearchResult
+
+__all__ = ["format_scorecard", "format_frontier", "write_bench_json"]
+
+
+def _row(e: DesignEval) -> str:
+    return (f"{e.point.name:<34} {e.cycles / 1e6:>12.1f} "
+            f"{e.energy_pj / 1e9:>11.2f} {e.area_mm2:>9.2f} "
+            f"{e.power_mw:>9.0f} {e.gops:>8.0f}")
+
+
+_HEADER = (f"{'design':<34} {'Mcycles':>12} {'energy mJ':>11} "
+           f"{'area mm2':>9} {'power mW':>9} {'GOP/s':>8}")
+
+
+def format_scorecard(evals: list[DesignEval], limit: int | None = None) -> str:
+    lines = [_HEADER, "-" * len(_HEADER)]
+    ordered = sorted(evals, key=lambda e: e.cycles)
+    for e in ordered[:limit]:
+        lines.append(_row(e))
+    if limit is not None and len(ordered) > limit:
+        lines.append(f"... ({len(ordered) - limit} more)")
+    return "\n".join(lines)
+
+
+def format_frontier(result: SearchResult) -> str:
+    lines = [
+        f"== Pareto frontier (cycles × energy × area) — "
+        f"{len(result.frontier)}/{result.n_designs} designs survive ==",
+        _HEADER, "-" * len(_HEADER),
+    ]
+    for e in result.frontier:
+        lines.append(_row(e))
+    for obj in ("cycles", "energy", "area", "edp"):
+        lines.append(f"best[{obj:>6}]: {result.best(obj).point.name}")
+    return "\n".join(lines)
+
+
+def write_bench_json(path: str, result: SearchResult,
+                     meta: dict | None = None) -> dict:
+    """Dump the sweep to ``BENCH_dse.json`` (atomic write); returns payload."""
+    payload = {
+        "bench": "dse",
+        "space": result.space,
+        "strategy": result.strategy,
+        "n_designs": result.n_designs,
+        "wall_s": result.wall_s,
+        "cache": result.cache_stats,
+        "meta": meta or {},
+        "frontier": [e.as_dict() for e in result.frontier],
+        "designs": [e.as_dict() for e in result.evals],
+        "best": {obj: result.best(obj).point.name
+                 for obj in ("cycles", "energy", "area", "edp")},
+    }
+    atomic_write_json(path, payload, indent=1)
+    return payload

@@ -1,0 +1,165 @@
+"""Search strategies over the design space + Pareto-frontier extraction.
+
+Exhaustive enumeration for small spaces; an evolutionary random-mutation loop
+(archive-based, deterministic seed) when the space outgrows it.  Both return
+a :class:`SearchResult` holding every evaluated scorecard and the
+non-dominated subset over (cycles, energy, area).
+"""
+
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+
+from .evaluate import DesignEval, Evaluator
+from .space import DesignPoint, DesignSpace
+
+__all__ = ["dominates", "pareto_frontier", "exhaustive_search",
+           "evolutionary_search", "run_search", "SearchResult"]
+
+
+def dominates(a, b) -> bool:
+    """True iff objective vector ``a`` Pareto-dominates ``b`` (minimize)."""
+    return all(x <= y for x, y in zip(a, b)) and any(
+        x < y for x, y in zip(a, b))
+
+
+def pareto_frontier(evals: list[DesignEval],
+                    key=lambda e: e.objectives()) -> list[DesignEval]:
+    """Non-dominated subset, sorted by first objective.
+
+    O(n²) pairwise filtering — design-space sweeps are hundreds of points,
+    not millions; simplicity and determinism win here.
+    """
+    out = []
+    vecs = [key(e) for e in evals]
+    for i, e in enumerate(evals):
+        dominated = False
+        for j, v in enumerate(vecs):
+            if j == i:
+                continue
+            if dominates(v, vecs[i]):
+                dominated = True
+                break
+            # identical vectors: keep only the first occurrence
+            if v == vecs[i] and j < i:
+                dominated = True
+                break
+        if not dominated:
+            out.append(e)
+    out.sort(key=lambda e: key(e))
+    return out
+
+
+@dataclass
+class SearchResult:
+    space: str
+    strategy: str
+    evals: list[DesignEval]
+    frontier: list[DesignEval]
+    wall_s: float = 0.0
+    cache_stats: dict = field(default_factory=dict)
+
+    @property
+    def n_designs(self) -> int:
+        return len(self.evals)
+
+    def best(self, objective: str = "cycles") -> DesignEval:
+        keyfn = {"cycles": lambda e: e.cycles,
+                 "energy": lambda e: e.energy_pj,
+                 "area": lambda e: e.area_mm2,
+                 "edp": lambda e: e.edp}[objective]
+        return min(self.frontier or self.evals, key=keyfn)
+
+
+def exhaustive_search(space: DesignSpace, evaluator: Evaluator,
+                      log=None) -> SearchResult:
+    t0 = time.perf_counter()
+    evals = []
+    points = space.enumerate()
+    for i, p in enumerate(points):
+        evals.append(evaluator.evaluate(p))
+        if log:
+            log(f"[{i + 1}/{len(points)}] {p.name}")
+    return SearchResult(space=space.name, strategy="exhaustive", evals=evals,
+                        frontier=pareto_frontier(evals),
+                        wall_s=time.perf_counter() - t0,
+                        cache_stats=evaluator.cache.stats)
+
+
+def _scalar_rank(evals: list[DesignEval]) -> list[float]:
+    """Normalized-sum scalarization used only for parent selection."""
+    if not evals:
+        return []
+    los = [min(e.objectives()[k] for e in evals) for k in range(3)]
+    his = [max(e.objectives()[k] for e in evals) for k in range(3)]
+    out = []
+    for e in evals:
+        s = 0.0
+        for k, v in enumerate(e.objectives()):
+            span = his[k] - los[k]
+            s += (v - los[k]) / span if span > 0 else 0.0
+        out.append(s)
+    return out
+
+
+def evolutionary_search(space: DesignSpace, evaluator: Evaluator,
+                        population: int = 12, generations: int = 8,
+                        seed: int = 0, log=None) -> SearchResult:
+    """Archive-based (μ+λ) random-mutation search.
+
+    Every evaluated point enters the archive keyed by its name, so mutation
+    revisits never re-run the evaluator (and the mapping cache removes the
+    per-layer cost of near-revisits that differ in one axis).
+    """
+    t0 = time.perf_counter()
+    rng = random.Random(seed)
+    archive: dict[str, DesignEval] = {}
+
+    def eval_point(p: DesignPoint) -> DesignEval:
+        if p.name not in archive:
+            archive[p.name] = evaluator.evaluate(p)
+        return archive[p.name]
+
+    pop = []
+    seen = set()
+    for _ in range(population * 4):
+        if len(pop) >= population:
+            break
+        p = space.sample(rng)
+        if p.name not in seen:
+            seen.add(p.name)
+            pop.append(p)
+    for g in range(generations):
+        evals = [eval_point(p) for p in pop]
+        ranks = _scalar_rank(evals)
+        order = sorted(range(len(pop)), key=lambda i: ranks[i])
+        parents = [pop[i] for i in order[:max(2, population // 2)]]
+        children = [space.mutate(rng.choice(parents), rng)
+                    for _ in range(population - len(parents))]
+        pop = parents + children
+        if log:
+            best = archive[min(archive, key=lambda n: archive[n].cycles)]
+            log(f"gen {g + 1}/{generations}: archive={len(archive)} "
+                f"best_cycles={best.cycles:.3g}")
+    for p in pop:
+        eval_point(p)
+    evals = list(archive.values())
+    return SearchResult(space=space.name, strategy="evolutionary",
+                        evals=evals, frontier=pareto_frontier(evals),
+                        wall_s=time.perf_counter() - t0,
+                        cache_stats=evaluator.cache.stats)
+
+
+def run_search(space: DesignSpace, evaluator: Evaluator,
+               strategy: str = "auto", max_exhaustive: int = 96,
+               log=None, **kw) -> SearchResult:
+    if strategy == "auto":
+        strategy = ("exhaustive" if space.raw_size <= max_exhaustive
+                    else "evolutionary")
+    if strategy == "exhaustive":
+        return exhaustive_search(space, evaluator, log=log)
+    if strategy == "evolutionary":
+        return evolutionary_search(space, evaluator, log=log, **kw)
+    raise ValueError(f"unknown strategy {strategy!r}")

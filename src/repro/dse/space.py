@@ -1,0 +1,206 @@
+"""Declarative hardware design space (DSE input).
+
+A :class:`DesignPoint` is one candidate accelerator: FU count, on-chip buffer
+capacity, DRAM bandwidth, and the set of runtime-switchable spatial dataflows
+the generated interconnect must support (the paper's ``M``/``N`` fused-design
+notation — ``fused`` designs pay mux/FIFO area for dataflow switching,
+§IV-C).  A :class:`DesignSpace` enumerates points over axis value lists with
+validity pruning, and provides ``sample``/``mutate`` for the evolutionary
+search strategy.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, replace
+
+from repro.core.mapper import SpatialChoice
+from repro.core.perf_model import HWConfig
+
+__all__ = ["DesignPoint", "DesignSpace", "SPACES", "DATAFLOW_SETS"]
+
+
+# Spatial-dataflow menus per workload, named after the stationarity they
+# implement.  "os" keeps outputs resident (accumulate in place), "ws" streams
+# outputs across a stationary-weight array, "switch" fuses both into one
+# runtime-switchable design (Conv2d-MNICOC / GEMM-MJ in the paper).
+DATAFLOW_SETS: dict[str, dict[str, tuple[SpatialChoice, ...]]] = {
+    "os": {
+        "gemm": (SpatialChoice(("i", "j"), (1, 1), "ij"),),
+        "conv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),),
+        "dwconv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),),
+    },
+    "ws": {
+        "gemm": (SpatialChoice(("k", "j"), (1, 1), "jk"),),
+        "conv2d": (SpatialChoice(("ic", "oc"), (1, 1), "icoc"),),
+        "dwconv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),),
+    },
+    "switch": {
+        "gemm": (SpatialChoice(("i", "j"), (1, 1), "ij"),
+                 SpatialChoice(("k", "j"), (1, 1), "jk")),
+        "conv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),
+                   SpatialChoice(("ic", "oc"), (1, 1), "icoc")),
+        "dwconv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),),
+    },
+}
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    """One candidate accelerator configuration."""
+
+    n_fus: int = 256
+    buffer_kb: int = 256
+    dram_gbps: float = 16.0
+    dataflow_set: str = "switch"
+
+    @property
+    def name(self) -> str:
+        return (f"fu{self.n_fus}-buf{self.buffer_kb}k-"
+                f"bw{self.dram_gbps:g}-{self.dataflow_set}")
+
+    @property
+    def buffer_bytes(self) -> int:
+        return self.buffer_kb * 1024
+
+    @property
+    def n_dataflows(self) -> int:
+        return max(len(v) for v in DATAFLOW_SETS[self.dataflow_set].values())
+
+    @property
+    def fused(self) -> bool:
+        return self.n_dataflows > 1
+
+    @property
+    def n_ppus(self) -> int:
+        # one PPU bank per 32 FUs, at least the paper's 8
+        return max(8, self.n_fus // 32)
+
+    def hw_config(self) -> HWConfig:
+        return HWConfig(n_fus=self.n_fus, buffer_bytes=self.buffer_bytes,
+                        dram_gbps=self.dram_gbps, n_ppus=self.n_ppus)
+
+    def spatials(self, workload_name: str) -> list[SpatialChoice]:
+        menu = DATAFLOW_SETS[self.dataflow_set]
+        if workload_name not in menu:
+            raise KeyError(
+                f"dataflow set {self.dataflow_set!r} has no spatial menu for "
+                f"workload {workload_name!r}")
+        return list(menu[workload_name])
+
+    def as_dict(self) -> dict:
+        return {"name": self.name, "n_fus": self.n_fus,
+                "buffer_kb": self.buffer_kb, "dram_gbps": self.dram_gbps,
+                "dataflow_set": self.dataflow_set, "fused": self.fused}
+
+
+@dataclass(frozen=True)
+class DesignSpace:
+    """Axis value lists + validity rules; the cartesian product, pruned."""
+
+    name: str
+    n_fus: tuple[int, ...] = (256,)
+    buffer_kb: tuple[int, ...] = (256,)
+    dram_gbps: tuple[float, ...] = (16.0,)
+    dataflow_sets: tuple[str, ...] = ("switch",)
+
+    # pruning rules
+    min_buffer_bytes_per_fu: int = 64     # can't even double-buffer tiles
+    max_buffer_bytes_per_fu: int = 64 * 1024  # buffer dwarfs the array
+    max_area_mm2: float | None = None     # closed-form area budget
+
+    @property
+    def raw_size(self) -> int:
+        return (len(self.n_fus) * len(self.buffer_kb) * len(self.dram_gbps)
+                * len(self.dataflow_sets))
+
+    def is_valid(self, p: DesignPoint) -> bool:
+        if p.dataflow_set not in DATAFLOW_SETS:
+            return False
+        if p.n_fus < 16 or p.n_fus > 16384:
+            return False
+        if p.n_fus & (p.n_fus - 1):
+            return False  # non-power-of-two arrays break factorization menus
+        per_fu = p.buffer_bytes / p.n_fus
+        if per_fu < self.min_buffer_bytes_per_fu:
+            return False
+        if per_fu > self.max_buffer_bytes_per_fu:
+            return False
+        if self.max_area_mm2 is not None:
+            from repro.core.cost import estimate_design_area_mm2
+            a = estimate_design_area_mm2(
+                p.n_fus, p.buffer_bytes, n_dataflows=p.n_dataflows,
+                n_ppus=p.n_ppus)["total_mm2"]
+            if a > self.max_area_mm2:
+                return False
+        return True
+
+    def enumerate(self) -> list[DesignPoint]:
+        pts = []
+        for nf, bk, bw, ds in itertools.product(
+                self.n_fus, self.buffer_kb, self.dram_gbps,
+                self.dataflow_sets):
+            p = DesignPoint(n_fus=nf, buffer_kb=bk, dram_gbps=bw,
+                            dataflow_set=ds)
+            if self.is_valid(p):
+                pts.append(p)
+        return pts
+
+    # -- evolutionary-search hooks ---------------------------------------
+    def sample(self, rng) -> DesignPoint:
+        """One valid random point (rng: ``random.Random``)."""
+        for _ in range(256):
+            p = DesignPoint(n_fus=rng.choice(self.n_fus),
+                            buffer_kb=rng.choice(self.buffer_kb),
+                            dram_gbps=rng.choice(self.dram_gbps),
+                            dataflow_set=rng.choice(self.dataflow_sets))
+            if self.is_valid(p):
+                return p
+        raise RuntimeError(f"design space {self.name!r} has no valid points")
+
+    def mutate(self, p: DesignPoint, rng) -> DesignPoint:
+        """Step one axis to a neighboring value (random-mutation search)."""
+        def step(values, cur):
+            values = sorted(set(values))
+            if cur not in values or len(values) == 1:
+                return rng.choice(values)
+            i = values.index(cur)
+            j = min(max(i + rng.choice((-1, 1)), 0), len(values) - 1)
+            return values[j]
+
+        for _ in range(64):
+            axis = rng.randrange(4)
+            if axis == 0:
+                q = replace(p, n_fus=step(self.n_fus, p.n_fus))
+            elif axis == 1:
+                q = replace(p, buffer_kb=step(self.buffer_kb, p.buffer_kb))
+            elif axis == 2:
+                q = replace(p, dram_gbps=step(self.dram_gbps, p.dram_gbps))
+            else:
+                q = replace(p, dataflow_set=rng.choice(self.dataflow_sets))
+            if q != p and self.is_valid(q):
+                return q
+        return self.sample(rng)
+
+
+SPACES: dict[str, DesignSpace] = {
+    # 2–4 points: CI smoke sweeps and unit tests
+    "tiny": DesignSpace(
+        name="tiny", n_fus=(64, 128), buffer_kb=(128,),
+        dataflow_sets=("os", "switch")),
+    # the acceptance sweep: ≥20 candidates, exhaustive
+    "small": DesignSpace(
+        name="small", n_fus=(64, 128, 256, 512, 1024),
+        buffer_kb=(128, 256, 512), dataflow_sets=("os", "ws", "switch")),
+    # adds a bandwidth axis; still exhaustive on a beefy machine
+    "medium": DesignSpace(
+        name="medium", n_fus=(64, 128, 256, 512, 1024, 2048),
+        buffer_kb=(128, 256, 512, 1024), dram_gbps=(16.0, 32.0),
+        dataflow_sets=("os", "ws", "switch"), max_area_mm2=20.0),
+    # evolutionary territory
+    "large": DesignSpace(
+        name="large", n_fus=(64, 128, 256, 512, 1024, 2048, 4096),
+        buffer_kb=(64, 128, 256, 512, 1024, 2048),
+        dram_gbps=(8.0, 16.0, 32.0, 64.0),
+        dataflow_sets=("os", "ws", "switch"), max_area_mm2=40.0),
+}

@@ -1,0 +1,12 @@
+"""JAX version compatibility shims for the Pallas TPU kernels.
+
+The compiler-params dataclass was renamed ``TPUCompilerParams`` →
+``CompilerParams`` across JAX releases; resolve whichever this install has.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

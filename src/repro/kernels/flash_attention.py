@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 NEG_INF = -1e30
 STATE_LANES = 128  # TPU-friendly lane width for the (m, l) state tiles
 
@@ -119,7 +121,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, STATE_LANES), jnp.float32),  # running sum
             pltpu.VMEM((bq, D), jnp.float32),            # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

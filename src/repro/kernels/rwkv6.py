@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_ref,
                  *, bt: int):
@@ -74,7 +76,7 @@ def rwkv6_pallas(r, k, v, w, u, *, bt: int, interpret: bool = False):
             jax.ShapeDtypeStruct((B, H, Dk, Dv), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

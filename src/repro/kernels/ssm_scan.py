@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _scan_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_out_ref,
                  h_ref, *, bl: int):
@@ -81,7 +83,7 @@ def ssm_scan_pallas(x, dt, A, B, C, D, *, bd: int, bl: int,
             jax.ShapeDtypeStruct((Bt, Dm, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, B, C, D.reshape(1, -1))

@@ -1,0 +1,226 @@
+"""DSE subsystem tests: Pareto correctness, persistent-cache round-trip,
+mapper determinism, space pruning/mutation, and an end-to-end tiny sweep."""
+
+import json
+import random
+
+import pytest
+
+from repro.core import workload as W
+from repro.core.fusion import estimate_data_nodes, score_fused_design
+from repro.core.mapper import SpatialChoice, best_mapping, factor_pairs
+from repro.core.perf_model import HWConfig
+from repro.dse import (MappingCache, SPACES, DesignPoint, DesignSpace,
+                       Evaluator, dominates, pareto_frontier, run_search)
+from repro.dse.cache import mapping_key
+from repro.dse.evaluate import DesignEval, lower_config
+from repro.dse.report import write_bench_json
+from repro.configs import get_config
+
+GEMM_SP = [SpatialChoice(("k", "j"), (1, 1), "jk"),
+           SpatialChoice(("i", "j"), (1, 1), "ij")]
+HW = HWConfig(n_fus=64, buffer_bytes=128 * 1024)
+
+
+def _eval(name, cycles, energy, area):
+    return DesignEval(point=DesignPoint(n_fus=64, buffer_kb=128),
+                      cycles=cycles, energy_pj=energy, area_mm2=area,
+                      power_mw=0.0, macs=1.0,
+                      per_config={"_label": {"name": name}})
+
+
+class TestPareto:
+    def test_dominates(self):
+        assert dominates((1, 1, 1), (2, 2, 2))
+        assert dominates((1, 2, 2), (2, 2, 2))
+        assert not dominates((2, 2, 2), (2, 2, 2))      # equal ≠ dominating
+        assert not dominates((1, 3, 1), (2, 2, 2))      # trade-off
+
+    def test_hand_built_scorecard(self):
+        evals = [
+            _eval("fast_big", cycles=10, energy=100, area=4.0),
+            _eval("slow_small", cycles=100, energy=100, area=1.0),
+            _eval("balanced", cycles=50, energy=50, area=2.0),
+            _eval("dominated", cycles=60, energy=60, area=2.5),   # by balanced
+            _eval("strictly_worse", cycles=200, energy=200, area=5.0),
+        ]
+        front = pareto_frontier(evals)
+        names = {e.per_config["_label"]["name"] for e in front}
+        assert names == {"fast_big", "slow_small", "balanced"}
+        # sorted by first objective (cycles)
+        assert [e.cycles for e in front] == sorted(e.cycles for e in front)
+
+    def test_duplicate_vectors_kept_once(self):
+        evals = [_eval("a", 10, 10, 1.0), _eval("b", 10, 10, 1.0)]
+        front = pareto_frontier(evals)
+        assert len(front) == 1
+
+    def test_single_point_is_frontier(self):
+        evals = [_eval("only", 10, 10, 1.0)]
+        assert pareto_frontier(evals) == evals
+
+
+class TestMappingCache:
+    def _query(self):
+        wl = W.gemm()
+        dims = dict(i=64, j=128, k=64)
+        dn = estimate_data_nodes(HW.n_fus, ["Y", "X", "W"])
+        return wl, dims, dn
+
+    def test_roundtrip_through_disk(self, tmp_path):
+        path = tmp_path / "cache.json"
+        wl, dims, dn = self._query()
+
+        c1 = MappingCache(path)
+        p1 = c1.best_mapping_perf(wl, dims, GEMM_SP, HW,
+                                  data_nodes_per_tensor=dn)
+        assert c1.misses == 1 and c1.hits == 0
+        p1b = c1.best_mapping_perf(wl, dims, GEMM_SP, HW,
+                                   data_nodes_per_tensor=dn)
+        assert c1.hits == 1
+        assert p1b.cycles == p1.cycles
+        c1.save()
+        assert path.exists()
+
+        # a fresh process-equivalent: load from disk, no mapper call needed
+        c2 = MappingCache(path)
+        assert len(c2) == 1
+        p2 = c2.best_mapping_perf(wl, dims, GEMM_SP, HW,
+                                  data_nodes_per_tensor=dn)
+        assert c2.hits == 1 and c2.misses == 0
+        assert p2.cycles == p1.cycles
+        assert p2.energy_pj == p1.energy_pj
+        assert c2.lookup_spatial(wl, dims, GEMM_SP, HW,
+                                 data_nodes_per_tensor=dn) in ("ij", "jk")
+
+    def test_key_sensitivity(self):
+        wl, dims, dn = self._query()
+        k1 = mapping_key(wl, dims, GEMM_SP, HW, dn, 0.0, "cycles")
+        assert k1 == mapping_key(wl, dict(dims), GEMM_SP, HW, dict(dn),
+                                 0.0, "cycles")
+        hw2 = HWConfig(n_fus=256, buffer_bytes=HW.buffer_bytes)
+        assert k1 != mapping_key(wl, dims, GEMM_SP, hw2, dn, 0.0, "cycles")
+        assert k1 != mapping_key(wl, {**dims, "i": 65}, GEMM_SP, HW, dn,
+                                 0.0, "cycles")
+        assert k1 != mapping_key(wl, dims, GEMM_SP, HW, dn, 0.0, "energy")
+        assert k1 != mapping_key(wl, dims, GEMM_SP[:1], HW, dn, 0.0, "cycles")
+
+    def test_corrupt_cache_is_cold_not_fatal(self, tmp_path):
+        path = tmp_path / "cache.json"
+        path.write_text("{not json")
+        c = MappingCache(path)
+        assert len(c) == 0
+
+
+class TestMapperDeterminism:
+    def test_best_mapping_repeatable(self):
+        wl = W.gemm()
+        dims = dict(i=96, j=512, k=256)
+        results = [best_mapping(wl, dims, GEMM_SP, HW) for _ in range(3)]
+        assert len({m.perf.cycles for m in results}) == 1
+        assert len({m.perf.energy_pj for m in results}) == 1
+        assert len({m.spatial.name for m in results}) == 1
+        assert len({m.dataflow.name for m in results}) == 1
+
+    def test_factor_pairs_memoized_and_correct(self):
+        assert factor_pairs(256) is factor_pairs(256)  # lru_cache hit
+        assert (16, 16) in factor_pairs(256)
+        assert all(a * b == 256 for a, b in factor_pairs(256))
+
+
+class TestDesignSpace:
+    def test_small_space_meets_acceptance_floor(self):
+        pts = SPACES["small"].enumerate()
+        assert len(pts) >= 20
+        assert len(set(p.name for p in pts)) == len(pts)
+
+    def test_pruning(self):
+        space = DesignSpace(name="t", n_fus=(1024,), buffer_kb=(16,),
+                            min_buffer_bytes_per_fu=64)
+        assert space.enumerate() == []  # 16 KB / 1024 FUs = 16 B/FU
+        space2 = DesignSpace(name="t2", n_fus=(96,))  # non-power-of-two
+        assert space2.enumerate() == []
+
+    def test_mutate_stays_valid(self):
+        space = SPACES["small"]
+        rng = random.Random(0)
+        p = space.sample(rng)
+        for _ in range(32):
+            q = space.mutate(p, rng)
+            assert space.is_valid(q)
+            p = q
+
+
+class TestEvaluator:
+    @pytest.fixture(scope="class")
+    def tiny_result(self, tmp_path_factory):
+        cfg_names = ["gemma_7b", "glm4_9b"]
+        zoo = {n: lower_config(get_config(n, reduced=True), seq=64)
+               for n in cfg_names}
+        cache = MappingCache(tmp_path_factory.mktemp("dse") / "c.json")
+        ev = Evaluator(zoo=zoo, cache=cache)
+        return run_search(SPACES["tiny"], ev, strategy="exhaustive"), ev
+
+    def test_sweep_shape(self, tiny_result):
+        result, _ = tiny_result
+        assert result.n_designs == len(SPACES["tiny"].enumerate())
+        assert 1 <= len(result.frontier) <= result.n_designs
+        for e in result.evals:
+            assert e.cycles > 0 and e.energy_pj > 0 and e.area_mm2 > 0
+            assert set(e.per_config) == {"gemma_7b", "glm4_9b"}
+
+    def test_frontier_is_nondominated(self, tiny_result):
+        result, _ = tiny_result
+        for a in result.frontier:
+            for b in result.evals:
+                assert not dominates(b.objectives(), a.objectives())
+
+    def test_cached_rerun_identical_and_mapper_free(self, tiny_result):
+        result, ev = tiny_result
+        before = ev.cache.misses
+        again = run_search(SPACES["tiny"], ev, strategy="exhaustive")
+        assert ev.cache.misses == before  # no new mapper calls
+        assert [e.cycles for e in again.evals] == \
+            [e.cycles for e in result.evals]
+
+    def test_bench_json(self, tiny_result, tmp_path):
+        result, _ = tiny_result
+        out = tmp_path / "BENCH_dse.json"
+        payload = write_bench_json(out, result)
+        loaded = json.loads(out.read_text())
+        assert loaded["n_designs"] == result.n_designs
+        assert loaded["best"]["cycles"] == result.best("cycles").point.name
+        assert payload["frontier"]
+
+
+class TestLowering:
+    def test_all_archs_lower(self):
+        from repro.configs import ARCH_IDS
+        for name in ARCH_IDS:
+            rows = lower_config(get_config(name, reduced=True), seq=32)
+            assert rows, name
+            for kind, dims, rep, nt in rows:
+                assert kind in ("gemm", "conv", "dwconv")
+                assert rep >= 1
+                assert all(v >= 1 for v in dims.values()), (name, dims)
+
+    def test_moe_scales_active_compute(self):
+        cfg = get_config("deepseek_moe_16b", reduced=True)
+        rows = lower_config(cfg, seq=32)
+        macs = sum(rep * dims["i"] * dims["j"] * dims["k"]
+                   for _, dims, rep, _ in rows)
+        dense = get_config("glm4_9b", reduced=True)
+        assert macs > 0 and dense is not None
+
+
+class TestScoreFusedDesign:
+    def test_matches_direct_mapper(self):
+        wl = W.gemm()
+        layers = [(wl, dict(i=64, j=256, k=128), 3, 16.0)]
+        dn = estimate_data_nodes(HW.n_fus, [t.name for t in wl.tensors])
+        s = score_fused_design(layers, GEMM_SP, HW,
+                               data_nodes_per_tensor=dn)
+        m = best_mapping(wl, dict(i=64, j=256, k=128), GEMM_SP, HW,
+                         data_nodes_per_tensor=dn, ppu_elements=16.0)
+        assert s.cycles == pytest.approx(3 * m.perf.cycles)
+        assert s.energy_pj == pytest.approx(3 * m.perf.energy_pj)
