@@ -2,11 +2,18 @@
 zoo, print the Pareto frontier, dump ``BENCH_dse.json``.
 
 Run:  python benchmarks/dse.py --space small
-      python benchmarks/dse.py --space large --strategy evolutionary
+      python benchmarks/dse.py --space large --workers 4
+
+Layer mappings are solved by the batched NumPy engine (all candidates of a
+layer batch in one broadcasted perf-kernel pass) and ``--workers N`` fans
+independent design evaluations across a process pool, so even a cold large
+sweep (hundreds of designs × multiple sequence lengths) finishes in seconds.
+``--seq`` accepts a comma list (e.g. ``--seq 512,4096``) to score several
+prefill lengths in one sweep; ``--space large`` defaults to ``512,4096``.
 
 Re-runs hit the persistent mapping cache (``.dse_mapping_cache.json`` next to
 the output file by default) and skip the mapper entirely for already-seen
-(design, layer) pairs, so a repeated sweep completes in seconds.
+(design, layer) pairs — worker-computed entries merge back on join.
 """
 
 from __future__ import annotations
@@ -38,13 +45,19 @@ def main(argv=None) -> int:
                          "(comma-separated, e.g. MobileNetV2,ResNet50) — "
                          "conv workloads make fused dataflow sets earn "
                          "their mux area")
-    ap.add_argument("--seq", type=int, default=512,
-                    help="prefill sequence length to score")
+    ap.add_argument("--seq", default=None,
+                    help="prefill sequence length(s) to score, comma list "
+                         "(default: 512; 512,4096 for --space large)")
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--reduced", action="store_true",
                     help="use smoke() configs instead of full()")
     ap.add_argument("--strategy", default="auto",
                     choices=["auto", "exhaustive", "evolutionary"])
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-pool fan-out for design evaluations")
+    ap.add_argument("--max-exhaustive", type=int, default=512,
+                    help="auto strategy: exhaustive up to this many raw "
+                         "points, evolutionary beyond")
     ap.add_argument("--objective", default="cycles",
                     choices=["cycles", "energy", "edp"],
                     help="per-layer mapping-search objective")
@@ -61,17 +74,29 @@ def main(argv=None) -> int:
     t0 = time.perf_counter()
     space = SPACES[args.space]
     configs = [c for c in args.configs.split(",") if c]
+    if args.seq is None:
+        args.seq = "512,4096" if args.space == "large" else "512"
+    try:
+        seqs = list(dict.fromkeys(int(s) for s in args.seq.split(",") if s))
+    except ValueError:
+        ap.error(f"--seq expects a comma list of ints, got {args.seq!r}")
+    if not seqs or any(s <= 0 for s in seqs):
+        ap.error(f"--seq expects positive lengths, got {args.seq!r}")
     log = (lambda m: None) if args.quiet else (
         lambda m: print(f"  {m}", flush=True))
 
     print(f"== DSE sweep: space={space.name} "
-          f"({space.raw_size} raw points), zoo={configs} ==")
-    try:
-        zoo = load_zoo(configs, seq=args.seq, batch=args.batch,
-                       reduced=args.reduced)
-    except ModuleNotFoundError as e:
-        ap.error(f"unknown config in --configs ({e.name}); "
-                 f"known ids: {', '.join(ARCH_IDS)}")
+          f"({space.raw_size} raw points), zoo={configs}, seq={seqs} ==")
+    zoo = {}
+    for seq in seqs:
+        try:
+            part = load_zoo(configs, seq=seq, batch=args.batch,
+                            reduced=args.reduced)
+        except ModuleNotFoundError as e:
+            ap.error(f"unknown config in --configs ({e.name}); "
+                     f"known ids: {', '.join(ARCH_IDS)}")
+        for k, v in part.items():
+            zoo[k if len(seqs) == 1 else f"{k}@s{seq}"] = v
     if args.nets:
         from benchmarks.nn_workloads import NETWORKS
         for net in args.nets.split(","):
@@ -92,7 +117,9 @@ def main(argv=None) -> int:
         print(f"  mapping cache: {len(cache)} entries from {cache_path}")
 
     evaluator = Evaluator(zoo=zoo, cache=cache, objective=args.objective)
-    result = run_search(space, evaluator, strategy=args.strategy, log=log)
+    result = run_search(space, evaluator, strategy=args.strategy, log=log,
+                        workers=args.workers,
+                        max_exhaustive=args.max_exhaustive)
     cache.save()
 
     print()
@@ -101,13 +128,14 @@ def main(argv=None) -> int:
     print(format_frontier(result))
 
     wall = time.perf_counter() - t0
-    meta = {"configs": configs, "seq": args.seq, "batch": args.batch,
-            "objective": args.objective, "total_wall_s": wall}
+    meta = {"configs": configs, "seqs": seqs, "batch": args.batch,
+            "objective": args.objective, "workers": args.workers,
+            "strategy": result.strategy, "total_wall_s": wall}
     write_bench_json(args.out, result, meta=meta)
     cs = result.cache_stats
     print(f"\nswept {result.n_designs} designs x {len(zoo)} configs in "
-          f"{wall:.1f}s (mapper cache: {cs['hits']} hits / "
-          f"{cs['misses']} misses); wrote {args.out}")
+          f"{wall:.1f}s (workers={args.workers}; mapper cache: "
+          f"{cs['hits']} hits / {cs['misses']} misses); wrote {args.out}")
     return 0
 
 

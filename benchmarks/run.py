@@ -388,6 +388,50 @@ def mapper_micro():
           f"speedup={us_df_raw / max(1.0, us_df_hit):.1f}x")
 
 
+# transformer-shaped GEMM layer set: the DSE evaluator's typical
+# per-(design, workload-kind) batched query.  Shared with the timing-budget
+# gate in scripts/check.sh.
+MAPPER_BENCH_QUERIES = [(dict(i=i, j=j, k=k), float(nt)) for i, j, k, nt in [
+    (512, 5120, 4096, 0), (512, 4096, 4096, 0), (512, 512, 128, 262144),
+    (512, 128, 512, 0), (512, 14336, 4096, 0), (512, 4096, 14336, 2048),
+    (512, 256000, 4096, 0), (1, 4096, 4096, 0), (4096, 4096, 4096, 0),
+    (512, 1024, 4096, 0), (512, 4096, 1024, 0), (512, 64, 4096, 0)]]
+MAPPER_BENCH_FUS = (64, 256, 1024)
+
+
+def mapper_batch_micro():
+    """Batched vs scalar mapping search: a transformer-shaped layer set
+    (the DSE evaluator's per-(design, workload-kind) query) through both
+    engines."""
+    from repro.core import workload as W
+    from repro.core.mapper import SpatialChoice, best_mapping
+    from repro.core.mapper_batch import best_mappings
+    from repro.core.perf_model import HWConfig
+
+    wl = W.gemm()
+    sps = [SpatialChoice(("i", "j"), (1, 1), "ij"),
+           SpatialChoice(("k", "j"), (1, 1), "jk")]
+    queries = MAPPER_BENCH_QUERIES
+    hws = [HWConfig(n_fus=n) for n in MAPPER_BENCH_FUS]
+
+    def scalar():
+        for hw in hws:
+            for dims, nt in queries:
+                best_mapping(wl, dims, sps, hw, ppu_elements=nt,
+                             engine="scalar")
+
+    def batched():
+        for hw in hws:
+            best_mappings(wl, queries, sps, hw)
+
+    us_scalar, _ = _timed(scalar)
+    us_batch, _ = _timed(batched)
+    n = len(queries) * len(hws)
+    _emit(f"micro.mapper_batch_{n}q", us_batch,
+          f"scalar_us={us_scalar:.0f};batched_us={us_batch:.0f};"
+          f"speedup={us_scalar / max(1.0, us_batch):.1f}x")
+
+
 def kernel_micro():
     import jax
     import jax.numpy as jnp
@@ -408,9 +452,9 @@ def kernel_micro():
 ALL = [fig10_backend_opts, fig11_e2e, fig12_breakdown,
        fig13_14_backend_breakdown, table2_genai, table3_handwritten,
        table4_scaling, table5_fusion, table6_related, instr_overhead,
-       mapper_micro, kernel_micro]
+       mapper_micro, mapper_batch_micro, kernel_micro]
 
-QUICK = [mapper_micro]
+QUICK = [mapper_micro, mapper_batch_micro]
 
 
 def main() -> None:

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# Pre-merge check: tier-1 tests + a smoke DSE sweep (tiny space, 2 configs).
-# Run from the repo root:  scripts/check.sh
+# Pre-merge check: tier-1 tests + mapper parity/perf gates + a smoke DSE
+# sweep (tiny space, 2 configs).  Run from the repo root:  scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,11 +19,46 @@ python -m pytest -x -q \
     --deselect tests/test_runtime.py::TestShardingRules::test_param_rules_cover_all_archs
 
 echo
-echo "== smoke DSE sweep (tiny space, reduced configs) =="
+echo "== mapper parity (batched engine vs scalar reference) =="
+# single source of truth for the parity logic — rerun it standalone so a
+# parity break is named here even if someone trims the tier-1 selection
+python -m pytest -q tests/test_mapper_batch.py -k "Parity"
+
+echo
+echo "== mapper timing budget =="
+python - <<'PY'
+import time
+
+from benchmarks.run import MAPPER_BENCH_FUS, MAPPER_BENCH_QUERIES
+from repro.core import workload as W
+from repro.core.mapper import SpatialChoice
+from repro.core.mapper_batch import best_mappings
+from repro.core.perf_model import HWConfig
+
+# cold batched mapping of the shared micro-bench query set (12 transformer
+# layer shapes x 3 array sizes) must stay well under 2s wall — the batched
+# engine does this in tens of milliseconds; tripping the budget means a
+# perf regression on the repo's hottest path.
+BUDGET_S = 2.0
+wl = W.gemm()
+sps = [SpatialChoice(("i", "j"), (1, 1), "ij"),
+       SpatialChoice(("k", "j"), (1, 1), "jk")]
+t0 = time.perf_counter()
+for n_fus in MAPPER_BENCH_FUS:
+    best_mappings(wl, MAPPER_BENCH_QUERIES, sps, HWConfig(n_fus=n_fus))
+dt = time.perf_counter() - t0
+n = len(MAPPER_BENCH_QUERIES) * len(MAPPER_BENCH_FUS)
+assert dt < BUDGET_S, f"mapper micro-bench too slow: {dt:.2f}s > {BUDGET_S}s"
+print(f"timing budget OK: {n} batched queries in {dt * 1e3:.0f}ms "
+      f"(budget {BUDGET_S:.0f}s)")
+PY
+
+echo
+echo "== smoke DSE sweep (tiny space, reduced configs, 2 workers) =="
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 python benchmarks/dse.py --space tiny --configs gemma_7b,glm4_9b \
-    --reduced --seq 64 -q \
+    --reduced --seq 64 --workers 2 -q \
     --out "$tmp/BENCH_dse.json" --cache-path "$tmp/cache.json"
 
 echo

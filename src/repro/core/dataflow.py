@@ -124,6 +124,24 @@ class Dataflow:
         grids = np.meshgrid(*[np.arange(sz) for sz in self.R_S], indexing="ij")
         return np.stack([g.reshape(-1) for g in grids], axis=-1).astype(np.int64)
 
+    def loop_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Candidate-row encoding for the batched perf kernels.
+
+        Returns ``(loop_dim, loop_size, S)``: temporal loop dim-indices and
+        trip counts (outermost first, ``(n_T,)`` int64) and the spatial
+        extent per iteration dim (``(n_dims,)`` int64).  Strides are
+        irrelevant to the perf model — only extents matter.
+        """
+        idx = {d: i for i, d in enumerate(self.iter_dims)}
+        loop_dim = np.array([idx[lp.dim] for lp in self.temporal],
+                            dtype=np.int64)
+        loop_size = np.array([lp.size for lp in self.temporal],
+                             dtype=np.int64)
+        S = np.ones(len(self.iter_dims), dtype=np.int64)
+        for lp in self.spatial:
+            S[idx[lp.dim]] *= lp.size
+        return loop_dim, loop_size, S
+
     def __repr__(self) -> str:
         sp = ",".join(f"{l.dim}:{l.size}" for l in self.spatial)
         tp = ",".join(f"{l.dim}:{l.size}" for l in self.temporal)

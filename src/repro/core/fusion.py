@@ -374,6 +374,7 @@ def score_fused_design(
     data_nodes_per_tensor: dict[str, int] | None = None,
     objective: str = "cycles",
     mapping_fn=None,
+    batch_mapping_fn=None,
 ) -> DesignScore:
     """Map every layer of ``layers`` onto one fused design and aggregate.
 
@@ -381,28 +382,58 @@ def score_fused_design(
     ``spatials``: the design's runtime-switchable spatial dataflows — either a
     flat ``list[SpatialChoice]`` applied to every layer or a
     ``dict[workload_name, list[SpatialChoice]]``.
+
+    By default all layers of a workload kind are solved in one vectorized
+    pass (:mod:`repro.core.mapper_batch`).  Two override hooks:
+    ``batch_mapping_fn(wl, queries, sps, hw, data_nodes_per_tensor,
+    objective) -> list[LayerPerf]`` replaces the batched solve per kind —
+    the DSE engine injects its persistent-cache front door here; the legacy
     ``mapping_fn(wl, dims, sps, hw, data_nodes_per_tensor, ppu_elements,
-    objective)`` overrides the mapper call — the DSE engine injects its
-    persistent-cache wrapper here.
+    objective)`` forces the per-layer path instead.  Aggregation always
+    walks ``layers`` in order, so totals are independent of the engine.
 
     This is the paper's "one generated architecture serves diverse models"
     scoring loop, previously private wiring inside ``benchmarks/e2e.py``.
     """
-    from .mapper import best_mapping
+    layers = list(layers)
+    perfs: list = [None] * len(layers)
+    if mapping_fn is not None:
+        for idx, (wl, dims, _, ppu_elements) in enumerate(layers):
+            sps = spatials[wl.name] if isinstance(spatials, dict) else spatials
+            dn = data_nodes_per_tensor
+            if dn is None:
+                dn = estimate_data_nodes(hw.n_fus,
+                                         [t.name for t in wl.tensors])
+            perfs[idx] = mapping_fn(wl, dims, sps, hw, dn, ppu_elements,
+                                    objective)
+    else:
+        if batch_mapping_fn is None:
+            from .mapper_batch import best_mappings
 
-    if mapping_fn is None:
-        def mapping_fn(wl, dims, sps, hw, dn, ppu, obj):
-            m = best_mapping(wl, dims, sps, hw, data_nodes_per_tensor=dn,
-                             ppu_elements=ppu, objective=obj)
-            return m.perf
+            def batch_mapping_fn(wl, queries, sps, hw, dn, obj):
+                return [m.perf for m in best_mappings(
+                    wl, queries, sps, hw, data_nodes_per_tensor=dn,
+                    objective=obj)]
+
+        by_kind: dict[str, list[int]] = {}
+        for idx, (wl, _, _, _) in enumerate(layers):
+            by_kind.setdefault(wl.name, []).append(idx)
+        for idxs in by_kind.values():
+            wl = layers[idxs[0]][0]
+            sps = spatials[wl.name] if isinstance(spatials, dict) else spatials
+            dn = data_nodes_per_tensor
+            if dn is None:
+                dn = estimate_data_nodes(hw.n_fus,
+                                         [t.name for t in wl.tensors])
+            ps = batch_mapping_fn(
+                wl, [(layers[i][1], layers[i][3]) for i in idxs], sps, hw,
+                dn, objective)
+            for i, p in zip(idxs, ps):
+                perfs[i] = p
 
     score = DesignScore()
-    for wl, dims, rep, ppu_elements in layers:
-        sps = spatials[wl.name] if isinstance(spatials, dict) else spatials
-        dn = data_nodes_per_tensor
-        if dn is None:
-            dn = estimate_data_nodes(hw.n_fus, [t.name for t in wl.tensors])
-        perf = mapping_fn(wl, dims, sps, hw, dn, ppu_elements, objective)
+    for idx, (_, _, rep, _) in enumerate(layers):
+        perf = perfs[idx]
         score.add(rep, perf.cycles, perf.energy_pj, perf.macs,
                   perf.ppu_cycles)
     return score

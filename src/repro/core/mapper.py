@@ -7,12 +7,22 @@ supports, the mapper pads dims to tileable sizes, enumerates spatial-array
 factorizations, tile splits and a set of canonical loop orders, evaluates
 each with the perf model, and returns the best mapping (min cycles, energy
 as tie-break).
+
+Candidate enumeration (:func:`enumerate_candidates`) is shared between two
+evaluation engines:
+
+``engine="batch"`` (default)
+    the NumPy-vectorized engine in :mod:`repro.core.mapper_batch` — the
+    whole candidate set is scored in one broadcasted perf-kernel pass.
+``engine="scalar"``
+    the reference candidate-at-a-time loop.  Both engines call the same
+    perf kernels, so they return bit-identical mappings; the scalar path is
+    kept as the parity oracle for tests.
 """
 
 from __future__ import annotations
 
 import functools
-import itertools
 from dataclasses import dataclass
 
 import numpy as np
@@ -21,7 +31,8 @@ from .dataflow import Dataflow, build_dataflow
 from .perf_model import HWConfig, LayerPerf, layer_perf
 from .workload import Workload
 
-__all__ = ["SpatialChoice", "Mapping", "best_mapping", "factor_pairs"]
+__all__ = ["SpatialChoice", "Mapping", "Candidate", "best_mapping",
+           "enumerate_candidates", "factor_pairs"]
 
 
 @dataclass(frozen=True)
@@ -38,6 +49,19 @@ class Mapping:
     dataflow: Dataflow
     perf: LayerPerf
     spatial: SpatialChoice
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One enumerated (spatial choice × factorization × loop order) point.
+
+    ``temporal`` is the outermost-first (dim, trip) nest; a dim may appear
+    twice when ``tile_search`` split its trip into two levels.
+    """
+
+    spatial_idx: int
+    facs: tuple[int, ...]
+    temporal: tuple[tuple[str, int], ...]
 
 
 @functools.lru_cache(maxsize=None)
@@ -102,17 +126,45 @@ def _orders(dims: list[str], wl: Workload, max_orders: int = 8) -> list[list[str
             _orders_cached(tuple(dims), workload_out_dims(wl), max_orders)]
 
 
-def best_mapping(
+def _tile_splits(temporal: tuple[tuple[str, int], ...]):
+    """Two-level tile variants of ``temporal``: one loop's trip ``T`` becomes
+    an outer ``T // t`` at its original depth plus an inner tile ``t``
+    innermost (classic inner-tiling; opt-in via ``tile_search=True``)."""
+    for p, (d, T) in enumerate(temporal):
+        for t in _tile_candidates(T):
+            if t <= 1 or t >= T or T % t:
+                continue
+            outer = temporal[:p] + ((d, T // t),) + temporal[p + 1:]
+            yield outer + ((d, t),)
+
+
+def enumerate_candidates(
     wl: Workload,
     dims: dict[str, int],
     spatials: list[SpatialChoice],
     hw: HWConfig,
-    data_nodes_per_tensor: dict[str, int] | None = None,
-    ppu_elements: float = 0.0,
-    objective: str = "cycles",  # "cycles" | "energy" | "edp"
-) -> Mapping:
-    best: Mapping | None = None
-    for sp in spatials:
+    tile_search: bool = False,
+) -> list[Candidate]:
+    """All deduplicated mapping candidates for one layer.
+
+    Dedup matters: a single-dim spatial choice collapses every factor pair
+    of ``factor_pairs(hw.n_fus)`` to the identical ``(n_fus,)`` candidate —
+    without dedup each was evaluated once per pair.  First occurrence order
+    is preserved so tie-breaking matches the historical scalar search.
+    """
+    orders = _orders(list(wl.iter_dims), wl)
+    out: list[Candidate] = []
+    seen: set[tuple] = set()
+
+    def add(cand: Candidate) -> bool:
+        key = (cand.spatial_idx, cand.facs, cand.temporal)
+        if key in seen:
+            return False
+        seen.add(key)
+        out.append(cand)
+        return True
+
+    for si, sp in enumerate(spatials):
         for facs in factor_pairs(hw.n_fus):
             if len(sp.dims) != len(facs):
                 if len(sp.dims) == 1:
@@ -132,22 +184,55 @@ def best_mapping(
             trips = {d: pad[d] for d in pad}
             for d, P in zip(sp.dims, facs):
                 trips[d] //= P
-            t_dims = [d for d in wl.iter_dims if trips.get(d, 1) >= 1]
-            for order in _orders(t_dims, wl):
-                temporal = [(d, trips[d]) for d in order if trips[d] > 1]
-                df = build_dataflow(
-                    wl, spatial=list(zip(sp.dims, facs)),
-                    temporal=temporal, c=sp.c,
-                    name=f"{sp.name}-{'x'.join(map(str, facs))}")
-                perf = layer_perf(wl, df, hw, true_sizes=dims,
-                                  data_nodes_per_tensor=data_nodes_per_tensor,
-                                  ppu_elements=ppu_elements)
-                key = {"cycles": (perf.cycles, perf.energy_pj),
-                       "energy": (perf.energy_pj, perf.cycles),
-                       "edp": (perf.cycles * perf.energy_pj,)}[objective]
-                if best is None or key < best._key:  # type: ignore[attr-defined]
-                    m = Mapping(df, perf, sp)
-                    m._key = key  # type: ignore[attr-defined]
-                    best = m
+            for order in orders:
+                temporal = tuple((d, trips[d]) for d in order if trips[d] > 1)
+                if add(Candidate(si, facs, temporal)) and tile_search:
+                    for split in _tile_splits(temporal):
+                        add(Candidate(si, facs, split))
+    return out
+
+
+def materialize(wl: Workload, cand: Candidate,
+                spatials: list[SpatialChoice]) -> Dataflow:
+    """Build the concrete (memoized) :class:`Dataflow` for a candidate."""
+    sp = spatials[cand.spatial_idx]
+    return build_dataflow(
+        wl, spatial=list(zip(sp.dims, cand.facs)),
+        temporal=list(cand.temporal), c=sp.c,
+        name=f"{sp.name}-{'x'.join(map(str, cand.facs))}")
+
+
+def best_mapping(
+    wl: Workload,
+    dims: dict[str, int],
+    spatials: list[SpatialChoice],
+    hw: HWConfig,
+    data_nodes_per_tensor: dict[str, int] | None = None,
+    ppu_elements: float = 0.0,
+    objective: str = "cycles",  # "cycles" | "energy" | "edp"
+    engine: str = "batch",      # "batch" | "scalar"
+    tile_search: bool = False,
+) -> Mapping:
+    if engine == "batch":
+        from .mapper_batch import best_mappings
+        return best_mappings(
+            wl, [(dims, ppu_elements)], spatials, hw,
+            data_nodes_per_tensor=data_nodes_per_tensor,
+            objective=objective, tile_search=tile_search)[0]
+
+    best: Mapping | None = None
+    best_key: tuple | None = None
+    for cand in enumerate_candidates(wl, dims, spatials, hw,
+                                     tile_search=tile_search):
+        df = materialize(wl, cand, spatials)
+        perf = layer_perf(wl, df, hw, true_sizes=dims,
+                          data_nodes_per_tensor=data_nodes_per_tensor,
+                          ppu_elements=ppu_elements)
+        key = {"cycles": (perf.cycles, perf.energy_pj),
+               "energy": (perf.energy_pj, perf.cycles),
+               "edp": (perf.cycles * perf.energy_pj,)}[objective]
+        if best_key is None or key < best_key:
+            best = Mapping(df, perf, spatials[cand.spatial_idx])
+            best_key = key
     assert best is not None, "no feasible mapping"
     return best

@@ -1,0 +1,182 @@
+"""Batched, NumPy-vectorized mapping-search engine.
+
+The scalar mapper walks (spatial choice × factorization × loop order)
+candidates one Python iteration at a time; a DSE sweep multiplies that by
+every (design, layer) pair and the per-candidate interpreter overhead
+dominates the whole repo's hot path.  This module keeps the *same* candidate
+enumeration (:func:`repro.core.mapper.enumerate_candidates`) but lowers the
+candidate set — for one layer or for **all layers of a workload kind at
+once** — into the struct-of-arrays row encoding of
+:mod:`repro.core.perf_model` and scores the entire batch in a single
+broadcasted :func:`~repro.core.perf_model.perf_kernel` pass.  Selection is a
+stable lexicographic argmin per layer, so ties resolve to the first
+enumerated candidate exactly like the scalar search; only the winning
+:class:`~repro.core.dataflow.Dataflow` is ever materialized.
+
+Because the scalar perf API wraps the identical kernels (batch of one), the
+two engines return bit-identical ``(cycles, energy, dataflow)`` decisions —
+asserted by the parity suite in ``tests/test_mapper_batch.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .mapper import (Candidate, Mapping, SpatialChoice, enumerate_candidates,
+                     materialize)
+from .perf_model import NO_TRUE_SIZE, HWConfig, LayerPerf, perf_kernel
+from .workload import Workload
+
+__all__ = ["CandidateBatch", "build_batch", "evaluate_batch", "best_mappings"]
+
+
+@dataclass
+class CandidateBatch:
+    """Struct-of-arrays form of every mapping candidate of a query batch.
+
+    Row ``i`` is one candidate of layer ``layer_id[i]``; ``offsets`` slices
+    rows per layer (``offsets[q] .. offsets[q+1]``).  Array semantics match
+    the row encoding documented in :mod:`repro.core.perf_model`.
+    """
+
+    wl: Workload
+    spatials: list[SpatialChoice]
+    candidates: list[Candidate]
+    loop_dim: np.ndarray   # (C, L) int64, -1 = padding slot
+    loop_size: np.ndarray  # (C, L) int64
+    S: np.ndarray          # (C, D) int64 spatial extent per dim
+    n_fus: np.ndarray      # (C,) int64
+    fill: np.ndarray       # (C,) float64
+    layer_id: np.ndarray   # (C,) int64
+    offsets: np.ndarray    # (n_layers + 1,) int64
+
+    @property
+    def n_candidates(self) -> int:
+        return len(self.candidates)
+
+
+def build_batch(
+    wl: Workload,
+    dims_list: list[dict[str, int]],
+    spatials: list[SpatialChoice],
+    hw: HWConfig,
+    tile_search: bool = False,
+) -> CandidateBatch:
+    """Enumerate + lower the candidates of every layer into one batch."""
+    D = len(wl.iter_dims)
+    dim_idx = {d: i for i, d in enumerate(wl.iter_dims)}
+    per_layer = [enumerate_candidates(wl, dims, spatials, hw,
+                                      tile_search=tile_search)
+                 for dims in dims_list]
+    cands = [c for cl in per_layer for c in cl]
+    C = len(cands)
+    L = max((len(c.temporal) for c in cands), default=0)
+
+    loop_dim = np.full((C, L), -1, dtype=np.int64)
+    loop_size = np.ones((C, L), dtype=np.int64)
+    S = np.ones((C, D), dtype=np.int64)
+    n_fus = np.empty(C, dtype=np.int64)
+    fill = np.empty(C, dtype=np.float64)
+    layer_id = np.empty(C, dtype=np.int64)
+    offsets = np.zeros(len(dims_list) + 1, dtype=np.int64)
+
+    i = 0
+    for li, cl in enumerate(per_layer):
+        for c in cl:
+            sp = spatials[c.spatial_idx]
+            for j, (d, r) in enumerate(c.temporal):
+                loop_dim[i, j] = dim_idx[d]
+                loop_size[i, j] = r
+            nf = 1
+            for d, P in zip(sp.dims, c.facs):
+                S[i, dim_idx[d]] *= P
+                nf *= P
+            n_fus[i] = nf
+            fill[i] = float(sum(c.facs))
+            layer_id[i] = li
+            i += 1
+        offsets[li + 1] = i
+    return CandidateBatch(wl, list(spatials), cands, loop_dim, loop_size, S,
+                          n_fus, fill, layer_id, offsets)
+
+
+def evaluate_batch(
+    batch: CandidateBatch,
+    hw: HWConfig,
+    dims_list: list[dict[str, int]],
+    ppu_list: list[float],
+    data_nodes_per_tensor: dict[str, int] | None = None,
+) -> dict[str, np.ndarray]:
+    """Score every candidate row: one broadcasted perf-kernel pass."""
+    wl = batch.wl
+    D = len(wl.iter_dims)
+    n_layers = len(dims_list)
+    true = np.full((n_layers, D), NO_TRUE_SIZE, dtype=np.int64)
+    for li, dims in enumerate(dims_list):
+        for i, d in enumerate(wl.iter_dims):
+            if d in dims:
+                true[li, i] = dims[d]
+    if data_nodes_per_tensor is None:
+        # scalar default is one bank read per FU; mapper candidates always
+        # span exactly hw.n_fus FUs, so min(dn, n_fus) == n_fus either way
+        dn_row = [hw.n_fus for _ in wl.tensors]
+    else:
+        dn_row = [data_nodes_per_tensor.get(t.name, hw.n_fus)
+                  for t in wl.tensors]
+    dn = np.array([dn_row], dtype=np.int64)
+    ppu = np.asarray(ppu_list, dtype=np.float64)
+    lid = batch.layer_id
+    return perf_kernel(wl, hw, batch.loop_dim, batch.loop_size, batch.S,
+                       n_fus=batch.n_fus, fill=batch.fill,
+                       true_sizes=true[lid],
+                       data_nodes=np.broadcast_to(
+                           dn, (batch.n_candidates, dn.shape[1])),
+                       ppu_elements=ppu[lid])
+
+
+def _argbest(cycles: np.ndarray, energy: np.ndarray, objective: str) -> int:
+    """Index of the objective-minimal candidate; ties resolve to the first
+    enumerated row (stable lexsort), matching the scalar strict-< search."""
+    if objective == "cycles":
+        return int(np.lexsort((energy, cycles))[0])
+    if objective == "energy":
+        return int(np.lexsort((cycles, energy))[0])
+    if objective == "edp":
+        return int(np.argmin(cycles * energy))
+    raise ValueError(f"unknown objective {objective!r}")
+
+
+def best_mappings(
+    wl: Workload,
+    queries: list[tuple[dict[str, int], float]],
+    spatials: list[SpatialChoice],
+    hw: HWConfig,
+    data_nodes_per_tensor: dict[str, int] | None = None,
+    objective: str = "cycles",
+    tile_search: bool = False,
+) -> list[Mapping]:
+    """Best mapping for every ``(dims, ppu_elements)`` query of one workload.
+
+    All queries share the spatial-dataflow menu and data-node counts (the
+    DSE evaluator's per-workload-kind shape), so their candidate sets are
+    concatenated and scored in a single kernel pass; argmin runs per layer
+    slice.  Only winners become :class:`Dataflow`/:class:`Mapping` objects.
+    """
+    dims_list = [q[0] for q in queries]
+    ppu_list = [float(q[1]) for q in queries]
+    batch = build_batch(wl, dims_list, spatials, hw, tile_search=tile_search)
+    r = evaluate_batch(batch, hw, dims_list, ppu_list,
+                       data_nodes_per_tensor=data_nodes_per_tensor)
+    out: list[Mapping] = []
+    for li in range(len(queries)):
+        lo, hi = int(batch.offsets[li]), int(batch.offsets[li + 1])
+        assert hi > lo, "no feasible mapping"
+        w = lo + _argbest(r["cycles"][lo:hi], r["energy_pj"][lo:hi],
+                          objective)
+        cand = batch.candidates[w]
+        out.append(Mapping(materialize(wl, cand, spatials),
+                           LayerPerf.from_kernel(r, w),
+                           spatials[cand.spatial_idx]))
+    return out

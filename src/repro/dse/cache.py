@@ -23,6 +23,7 @@ import os
 import tempfile
 
 from repro.core.mapper import Mapping, SpatialChoice, best_mapping
+from repro.core.mapper_batch import best_mappings
 from repro.core.perf_model import HWConfig, LayerPerf
 from repro.core.workload import Workload
 
@@ -73,6 +74,7 @@ class MappingCache:
                  autoload: bool = True):
         self.path = os.fspath(path) if path is not None else None
         self._store: dict[str, dict] = {}
+        self._journal: dict[str, dict] = {}  # entries put() since last drain
         self.hits = 0
         self.misses = 0
         self._dirty = False
@@ -104,6 +106,7 @@ class MappingCache:
         atomic_write_json(path, {"schema": _SCHEMA, "entries": self._store},
                           separators=(",", ":"))
         self._dirty = False
+        self._journal.clear()  # persisted — nothing left to ship anywhere
 
     # -- raw access -------------------------------------------------------
     def get(self, key: str) -> dict | None:
@@ -116,7 +119,35 @@ class MappingCache:
 
     def put(self, key: str, value: dict) -> None:
         self._store[key] = value
+        self._journal[key] = value
         self._dirty = True
+
+    def snapshot(self) -> dict[str, dict]:
+        """The live entry dict (read-only by convention) — ships the warm
+        parent cache into freshly spawned sweep workers."""
+        return self._store
+
+    def drain_new(self) -> dict[str, dict]:
+        """Entries ``put()`` since the last drain (journal is cleared).
+
+        O(new entries) — the parallel-sweep workers call this after every
+        design evaluation to ship only fresh mapping results back to the
+        parent, instead of re-scanning the whole store."""
+        new, self._journal = self._journal, {}
+        return new
+
+    def merge(self, entries: dict[str, dict]) -> int:
+        """Adopt entries computed elsewhere (a worker process); returns the
+        number of new keys.  Entries are content-addressed and the mapper is
+        deterministic, so colliding keys are identical — first write wins."""
+        new = 0
+        for k, v in entries.items():
+            if k not in self._store:
+                self._store[k] = v
+                new += 1
+        if new:
+            self._dirty = True
+        return new
 
     @property
     def stats(self) -> dict:
@@ -149,6 +180,41 @@ class MappingCache:
                        "spatial": m.spatial.name,
                        "dataflow": m.dataflow.name})
         return m.perf
+
+    def best_mapping_perfs(self, wl: Workload,
+                           queries: list[tuple[dict, float]],
+                           spatials: list[SpatialChoice], hw: HWConfig,
+                           data_nodes_per_tensor: dict[str, int] | None = None,
+                           objective: str = "cycles") -> list[LayerPerf]:
+        """Batched :meth:`best_mapping_perf` over ``(dims, ppu_elements)``
+        queries sharing one workload/spatial-menu/data-node shape.
+
+        Cache hits are answered immediately; all misses are solved in a
+        single vectorized :func:`~repro.core.mapper_batch.best_mappings`
+        pass — this is the DSE evaluator's per-(design, workload-kind)
+        front door.
+        """
+        keys = [mapping_key(wl, dims, spatials, hw, data_nodes_per_tensor,
+                            ppu, objective) for dims, ppu in queries]
+        out: list[LayerPerf | None] = [None] * len(queries)
+        miss: list[int] = []
+        for i, k in enumerate(keys):
+            e = self.get(k)
+            if e is not None:
+                out[i] = LayerPerf.from_dict(e["perf"])
+            else:
+                miss.append(i)
+        if miss:
+            solved = best_mappings(
+                wl, [queries[i] for i in miss], spatials, hw,
+                data_nodes_per_tensor=data_nodes_per_tensor,
+                objective=objective)
+            for i, m in zip(miss, solved):
+                self.put(keys[i], {"perf": m.perf.as_dict(),
+                                   "spatial": m.spatial.name,
+                                   "dataflow": m.dataflow.name})
+                out[i] = m.perf
+        return out  # type: ignore[return-value]
 
     def lookup_spatial(self, wl: Workload, dims: dict[str, int],
                        spatials: list[SpatialChoice], hw: HWConfig,

@@ -2,10 +2,12 @@
 
 Lowers every :class:`~repro.models.common.ModelConfig` in the zoo to its
 layer :class:`~repro.core.workload.Workload`s **once**, then scores each
-candidate design by running the mapping search per (design, layer) through
-the persistent :class:`~repro.dse.cache.MappingCache` and aggregating
-cycles/energy via :func:`repro.core.fusion.score_fused_design` and area/power
-via the closed-form estimators in :mod:`repro.core.cost`.
+candidate design by running the mapping search through the persistent
+:class:`~repro.dse.cache.MappingCache` — all cache-missing layer shapes of a
+config are solved per workload kind in **one batched query** against the
+vectorized engine (:mod:`repro.core.mapper_batch`) — and aggregating
+cycles/energy per layer row plus area/power via the closed-form estimators
+in :mod:`repro.core.cost`.
 
 The lowering mirrors ``benchmarks/nn_workloads.py``: every block becomes a
 list of ``(kind, dims, repeat, nontensor_elements)`` rows with
@@ -204,15 +206,11 @@ class Evaluator:
                       for kind, dims, rep, nt in rows]
             spatials = {wl.name: point.spatials(wl.name)
                         for wl, _, _, _ in layers}
-
-            def mapping_fn(wl, dims, sps, hw, dn, ppu, obj):
-                return self.cache.best_mapping_perf(
-                    wl, dims, sps, hw, data_nodes_per_tensor=dn,
-                    ppu_elements=ppu, objective=obj)
-
+            # all cache-missing layer shapes of a workload kind solve in a
+            # single batched query through the persistent mapping cache
             s = score_fused_design(layers, spatials, hw,
                                    objective=self.objective,
-                                   mapping_fn=mapping_fn)
+                                   batch_mapping_fn=self.cache.best_mapping_perfs)
             per_config[cfg_name] = {
                 "cycles": s.cycles, "energy_pj": s.energy_pj,
                 "macs": s.macs, "gops": s.gops,

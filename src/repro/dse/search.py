@@ -4,14 +4,26 @@ Exhaustive enumeration for small spaces; an evolutionary random-mutation loop
 (archive-based, deterministic seed) when the space outgrows it.  Both return
 a :class:`SearchResult` holding every evaluated scorecard and the
 non-dominated subset over (cycles, energy, area).
+
+Both strategies accept ``workers=N``: independent :class:`DesignPoint`
+evaluations fan out across a process pool (each worker holds its own
+in-memory :class:`~repro.dse.cache.MappingCache`, warm-started from the
+parent's entries) and results return **in submission order**, so the sweep
+is deterministic — the frontier is independent of the worker count.  New
+mapping-cache entries computed by workers merge back into the parent cache
+on join, so a later ``cache.save()`` persists them.
 """
 
 from __future__ import annotations
 
+import multiprocessing
 import random
+import sys
 import time
+from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
 
+from .cache import MappingCache
 from .evaluate import DesignEval, Evaluator
 from .space import DesignPoint, DesignSpace
 
@@ -73,15 +85,89 @@ class SearchResult:
         return min(self.frontier or self.evals, key=keyfn)
 
 
+# ---------------------------------------------------------------------------
+# process-pool fan-out
+# ---------------------------------------------------------------------------
+
+_WORKER: dict = {}
+
+
+def _init_worker(zoo, objective, warm_entries):
+    """Build this worker's Evaluator around a private in-memory mapping
+    cache, warm-started with the parent's entries."""
+    cache = MappingCache()
+    cache.merge(warm_entries)  # merge bypasses the put() journal, so the
+    _WORKER["ev"] = Evaluator(  # warm entries never echo back to the parent
+        zoo=zoo, cache=cache, objective=objective)
+
+
+def _worker_eval(point: DesignPoint):
+    ev: Evaluator = _WORKER["ev"]
+    h0, m0 = ev.cache.hits, ev.cache.misses
+    e = ev.evaluate(point)
+    return (e, ev.cache.drain_new(),
+            ev.cache.hits - h0, ev.cache.misses - m0)
+
+
+class _PointEvaluator:
+    """Sequential or process-pool DesignPoint evaluation with in-order
+    results and mapping-cache merge-on-join."""
+
+    def __init__(self, evaluator: Evaluator, workers: int = 1):
+        self.evaluator = evaluator
+        self.workers = max(1, int(workers))
+        self._pool = None
+        if self.workers > 1:
+            # The DSE stack is pure NumPy, so forking is cheap and safe —
+            # unless the host process already loaded the (multithreaded)
+            # JAX runtime, in which case spawn fresh workers instead.
+            ctx = multiprocessing.get_context(
+                "spawn" if "jax" in sys.modules else None)
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.workers, mp_context=ctx,
+                initializer=_init_worker,
+                initargs=(evaluator.zoo, evaluator.objective,
+                          evaluator.cache.snapshot()))
+
+    def map(self, points: list[DesignPoint], log=None) -> list[DesignEval]:
+        if self._pool is None:
+            out = []
+            for i, p in enumerate(points):
+                out.append(self.evaluator.evaluate(p))
+                if log:
+                    log(f"[{i + 1}/{len(points)}] {p.name}")
+            return out
+        cache = self.evaluator.cache
+        chunk = max(1, len(points) // (self.workers * 4))
+        out = []
+        for i, (e, new, dh, dm) in enumerate(
+                self._pool.map(_worker_eval, points, chunksize=chunk)):
+            cache.merge(new)
+            cache.hits += dh
+            cache.misses += dm
+            out.append(e)
+            if log:
+                log(f"[{i + 1}/{len(points)}] {points[i].name}")
+        return out
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
 def exhaustive_search(space: DesignSpace, evaluator: Evaluator,
-                      log=None) -> SearchResult:
+                      log=None, workers: int = 1) -> SearchResult:
     t0 = time.perf_counter()
-    evals = []
     points = space.enumerate()
-    for i, p in enumerate(points):
-        evals.append(evaluator.evaluate(p))
-        if log:
-            log(f"[{i + 1}/{len(points)}] {p.name}")
+    with _PointEvaluator(evaluator, workers) as pe:
+        evals = pe.map(points, log=log)
     return SearchResult(space=space.name, strategy="exhaustive", evals=evals,
                         frontier=pareto_frontier(evals),
                         wall_s=time.perf_counter() - t0,
@@ -106,45 +192,56 @@ def _scalar_rank(evals: list[DesignEval]) -> list[float]:
 
 def evolutionary_search(space: DesignSpace, evaluator: Evaluator,
                         population: int = 12, generations: int = 8,
-                        seed: int = 0, log=None) -> SearchResult:
+                        seed: int = 0, log=None,
+                        workers: int = 1) -> SearchResult:
     """Archive-based (μ+λ) random-mutation search.
 
     Every evaluated point enters the archive keyed by its name, so mutation
     revisits never re-run the evaluator (and the mapping cache removes the
-    per-layer cost of near-revisits that differ in one axis).
+    per-layer cost of near-revisits that differ in one axis).  With
+    ``workers > 1`` each generation's unseen points evaluate concurrently;
+    archive updates stay in submission order, so the run is reproducible at
+    any worker count.
     """
     t0 = time.perf_counter()
     rng = random.Random(seed)
     archive: dict[str, DesignEval] = {}
 
-    def eval_point(p: DesignPoint) -> DesignEval:
-        if p.name not in archive:
-            archive[p.name] = evaluator.evaluate(p)
-        return archive[p.name]
+    with _PointEvaluator(evaluator, workers) as pe:
 
-    pop = []
-    seen = set()
-    for _ in range(population * 4):
-        if len(pop) >= population:
-            break
-        p = space.sample(rng)
-        if p.name not in seen:
-            seen.add(p.name)
-            pop.append(p)
-    for g in range(generations):
-        evals = [eval_point(p) for p in pop]
-        ranks = _scalar_rank(evals)
-        order = sorted(range(len(pop)), key=lambda i: ranks[i])
-        parents = [pop[i] for i in order[:max(2, population // 2)]]
-        children = [space.mutate(rng.choice(parents), rng)
-                    for _ in range(population - len(parents))]
-        pop = parents + children
-        if log:
-            best = archive[min(archive, key=lambda n: archive[n].cycles)]
-            log(f"gen {g + 1}/{generations}: archive={len(archive)} "
-                f"best_cycles={best.cycles:.3g}")
-    for p in pop:
-        eval_point(p)
+        def eval_points(points: list[DesignPoint]) -> list[DesignEval]:
+            todo, seen_names = [], set()
+            for p in points:
+                if p.name not in archive and p.name not in seen_names:
+                    seen_names.add(p.name)
+                    todo.append(p)
+            for p, e in zip(todo, pe.map(todo)):
+                archive[p.name] = e
+            return [archive[p.name] for p in points]
+
+        pop = []
+        seen = set()
+        for _ in range(population * 4):
+            if len(pop) >= population:
+                break
+            p = space.sample(rng)
+            if p.name not in seen:
+                seen.add(p.name)
+                pop.append(p)
+        for g in range(generations):
+            evals = eval_points(pop)
+            ranks = _scalar_rank(evals)
+            order = sorted(range(len(pop)), key=lambda i: ranks[i])
+            parents = [pop[i] for i in order[:max(2, population // 2)]]
+            children = [space.mutate(rng.choice(parents), rng)
+                        for _ in range(population - len(parents))]
+            pop = parents + children
+            if log:
+                best = archive[min(archive,
+                                   key=lambda n: archive[n].cycles)]
+                log(f"gen {g + 1}/{generations}: archive={len(archive)} "
+                    f"best_cycles={best.cycles:.3g}")
+        eval_points(pop)
     evals = list(archive.values())
     return SearchResult(space=space.name, strategy="evolutionary",
                         evals=evals, frontier=pareto_frontier(evals),
@@ -154,12 +251,13 @@ def evolutionary_search(space: DesignSpace, evaluator: Evaluator,
 
 def run_search(space: DesignSpace, evaluator: Evaluator,
                strategy: str = "auto", max_exhaustive: int = 96,
-               log=None, **kw) -> SearchResult:
+               log=None, workers: int = 1, **kw) -> SearchResult:
     if strategy == "auto":
         strategy = ("exhaustive" if space.raw_size <= max_exhaustive
                     else "evolutionary")
     if strategy == "exhaustive":
-        return exhaustive_search(space, evaluator, log=log)
+        return exhaustive_search(space, evaluator, log=log, workers=workers)
     if strategy == "evolutionary":
-        return evolutionary_search(space, evaluator, log=log, **kw)
+        return evolutionary_search(space, evaluator, log=log,
+                                   workers=workers, **kw)
     raise ValueError(f"unknown strategy {strategy!r}")

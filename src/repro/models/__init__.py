@@ -1,3 +1,17 @@
 from .common import BlockSpec, ModelConfig
-from .transformer import (decode_step, forward, init_decode_state,
-                          init_params, loss_fn)
+
+__all__ = ["BlockSpec", "ModelConfig", "decode_step", "forward",
+           "init_decode_state", "init_params", "loss_fn"]
+
+_TRANSFORMER = ("decode_step", "forward", "init_decode_state", "init_params",
+                "loss_fn")
+
+
+def __getattr__(name):
+    # Lazy re-export: the transformer stack drags in the JAX runtime, which
+    # the pure-NumPy DSE/mapper path (and its fork-based worker pools) must
+    # not pay for just to read ModelConfig.
+    if name in _TRANSFORMER:
+        from . import transformer
+        return getattr(transformer, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

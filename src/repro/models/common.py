@@ -12,9 +12,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+# jax is imported lazily inside the numerics helpers: the config schema
+# (ModelConfig/BlockSpec) is consumed by the pure-NumPy DSE stack — and by
+# its fork-based worker pools — which must not drag in the JAX runtime.
 
 __all__ = ["BlockSpec", "ModelConfig", "rms_norm", "layer_norm", "rope",
            "make_dense", "softcap"]
@@ -109,6 +111,7 @@ class ModelConfig:
 
     @property
     def jdtype(self):
+        import jax.numpy as jnp
         return jnp.dtype(self.dtype)
 
     @property
@@ -160,6 +163,8 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 
 def rms_norm(x, scale, eps=1e-6):
+    import jax
+    import jax.numpy as jnp
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
@@ -167,6 +172,8 @@ def rms_norm(x, scale, eps=1e-6):
 
 
 def layer_norm(x, scale, bias, eps=1e-6):
+    import jax
+    import jax.numpy as jnp
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
@@ -176,11 +183,13 @@ def layer_norm(x, scale, bias, eps=1e-6):
 def softcap(x, cap: float | None):
     if cap is None:
         return x
+    import jax.numpy as jnp
     return cap * jnp.tanh(x / cap)
 
 
 def rope(x, positions, theta: float = 10000.0):
     """x (..., T, H, D) with D even; positions (..., T)."""
+    import jax.numpy as jnp
     D = x.shape[-1]
     half = D // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
@@ -192,6 +201,8 @@ def rope(x, positions, theta: float = 10000.0):
 
 
 def make_dense(key, shape, dtype, scale=None):
+    import jax
+    import jax.numpy as jnp
     fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
     scale = scale if scale is not None else fan_in ** -0.5
     return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,214 @@
+"""Parity + determinism suite for the batched mapping engine.
+
+The batched engine (``repro.core.mapper_batch``) must return bit-identical
+``(cycles, energy, spatial, dataflow)`` decisions to the scalar reference
+path — both engines share the candidate enumeration and the perf kernels, so
+any drift is a real bug.  Randomized parity runs on seeded ``random`` (always
+exercised) plus hypothesis property tests where available; the worker-pool
+sweep must produce a frontier independent of the worker count.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip cleanly where hypothesis is absent
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import workload as W
+from repro.core.mapper import (SpatialChoice, best_mapping,
+                               enumerate_candidates, factor_pairs)
+from repro.core.mapper_batch import best_mappings, build_batch
+from repro.core.perf_model import HWConfig, layer_perf
+
+GEMM_SP = [SpatialChoice(("i", "j"), (1, 1), "ij"),
+           SpatialChoice(("k", "j"), (1, 1), "jk")]
+HW = HWConfig(n_fus=256)
+
+_WLS = {w.name: w for w in (W.gemm(), W.conv2d(), W.depthwise_conv2d(),
+                            W.attention_qk(), W.mttkrp())}
+_SP_MENU = {
+    "gemm": GEMM_SP + [SpatialChoice(("j",), (1,), "j1")],
+    "conv2d": [SpatialChoice(("ow", "oh"), (0, 0), "ohow"),
+               SpatialChoice(("ic", "oc"), (1, 1), "icoc")],
+    "dwconv2d": [SpatialChoice(("ow", "oh"), (0, 0), "ohow")],
+    "attention_qk": [SpatialChoice(("m", "n"), (1, 1), "mn"),
+                     SpatialChoice(("d", "n"), (1, 1), "nd")],
+    "mttkrp": [SpatialChoice(("i", "j"), (1, 1), "ij")],
+}
+_DIM_VALUES = (1, 3, 7, 16, 56, 130, 512, 2048)
+
+
+def _random_case(rng):
+    name = rng.choice(sorted(_WLS))
+    wl = _WLS[name]
+    dims = {d: rng.choice(_DIM_VALUES) for d in wl.iter_dims}
+    hw = HWConfig(n_fus=rng.choice([64, 256, 1024]),
+                  buffer_bytes=rng.choice([64, 256, 1024]) * 1024,
+                  dram_gbps=rng.choice([8.0, 16.0, 64.0]))
+    obj = rng.choice(["cycles", "energy", "edp"])
+    dn = ({t.name: rng.choice([8, 16]) for t in wl.tensors}
+          if rng.random() < 0.5 else None)
+    ppu = rng.choice([0.0, 4096.0])
+    return wl, dims, _SP_MENU[name], hw, dn, ppu, obj
+
+
+def _assert_same_mapping(ms, mb, ctx=""):
+    for f in ("cycles", "energy_pj", "macs", "utilization", "dram_bytes",
+              "sram_reads", "ppu_cycles"):
+        assert getattr(ms.perf, f) == getattr(mb.perf, f), (f, ctx)
+    assert ms.perf.bound == mb.perf.bound, ctx
+    assert ms.spatial.name == mb.spatial.name, ctx
+    # dataflow construction is memoized: identical decisions share objects
+    assert ms.dataflow is mb.dataflow, ctx
+
+
+class TestScalarBatchParity:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_randomized_parity(self, seed):
+        """Seeded-random parity across workloads/dims/HWConfigs/objectives
+        (runs everywhere, no hypothesis needed)."""
+        rng = random.Random(seed)
+        for _ in range(25):
+            wl, dims, sps, hw, dn, ppu, obj = _random_case(rng)
+            ms = best_mapping(wl, dims, sps, hw, data_nodes_per_tensor=dn,
+                              ppu_elements=ppu, objective=obj,
+                              engine="scalar")
+            mb = best_mapping(wl, dims, sps, hw, data_nodes_per_tensor=dn,
+                              ppu_elements=ppu, objective=obj,
+                              engine="batch")
+            _assert_same_mapping(ms, mb, (wl.name, dims, obj))
+
+    def test_tile_search_parity_and_no_regression(self):
+        rng = random.Random(7)
+        for _ in range(10):
+            wl, dims, sps, hw, dn, ppu, obj = _random_case(rng)
+            ms = best_mapping(wl, dims, sps, hw, data_nodes_per_tensor=dn,
+                              ppu_elements=ppu, objective="cycles",
+                              engine="scalar", tile_search=True)
+            mb = best_mapping(wl, dims, sps, hw, data_nodes_per_tensor=dn,
+                              ppu_elements=ppu, objective="cycles",
+                              engine="batch", tile_search=True)
+            _assert_same_mapping(ms, mb, (wl.name, dims, "tile"))
+            base = best_mapping(wl, dims, sps, hw, data_nodes_per_tensor=dn,
+                                ppu_elements=ppu, objective="cycles")
+            # tile_search only widens the space: never worse, and identical
+            # when no split wins (ties keep the earlier base candidate)
+            assert mb.perf.cycles <= base.perf.cycles
+
+    def test_multi_query_matches_single(self):
+        wl = W.gemm()
+        queries = [(dict(i=64, j=256, k=128), 0.0),
+                   (dict(i=512, j=512, k=512), 16.0),
+                   (dict(i=1, j=4096, k=4096), 0.0)]
+        many = best_mappings(wl, queries, GEMM_SP, HW)
+        for (dims, ppu), m_many in zip(queries, many):
+            m_one = best_mapping(wl, dims, GEMM_SP, HW, ppu_elements=ppu)
+            _assert_same_mapping(m_one, m_many, dims)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.tuples(st.sampled_from(_DIM_VALUES),
+                     st.sampled_from(_DIM_VALUES),
+                     st.sampled_from(_DIM_VALUES)),
+           st.sampled_from([64, 256, 1024]),
+           st.sampled_from(["cycles", "energy", "edp"]))
+    def test_property_gemm_parity(self, ijk, n_fus, objective):
+        wl = W.gemm()
+        dims = dict(zip("ijk", ijk))
+        hw = HWConfig(n_fus=n_fus)
+        ms = best_mapping(wl, dims, GEMM_SP, hw, objective=objective,
+                          engine="scalar")
+        mb = best_mapping(wl, dims, GEMM_SP, hw, objective=objective,
+                          engine="batch")
+        _assert_same_mapping(ms, mb, (dims, objective))
+
+
+class TestEnumeration:
+    def test_single_dim_spatial_deduped(self):
+        """The historical duplicate-work bug: a 1-D spatial choice collapsed
+        every factor pair to the same (n_fus,) candidate."""
+        wl = W.gemm()
+        sps = [SpatialChoice(("j",), (1,), "j1")]
+        cands = enumerate_candidates(wl, dict(i=64, j=512, k=64), sps, HW)
+        keys = [(c.spatial_idx, c.facs, c.temporal) for c in cands]
+        assert len(keys) == len(set(keys))
+        assert all(c.facs == (HW.n_fus,) for c in cands)
+        # without dedup this would be ~len(factor_pairs) times larger
+        assert len(cands) <= len(factor_pairs(HW.n_fus)) * 5
+
+    def test_batch_rows_match_candidates(self):
+        wl = W.conv2d()
+        dims = dict(n=1, oc=64, ic=32, oh=56, ow=56, kh=3, kw=3)
+        sps = _SP_MENU["conv2d"]
+        batch = build_batch(wl, [dims], sps, HW)
+        assert batch.n_candidates == len(
+            enumerate_candidates(wl, dims, sps, HW))
+        assert batch.loop_dim.shape == batch.loop_size.shape
+        assert (batch.n_fus == HW.n_fus).all()
+        # padding slots are inert (size 1, dim -1)
+        pad = batch.loop_dim < 0
+        assert (batch.loop_size[pad] == 1).all()
+
+    def test_tile_search_defaults_off(self):
+        wl = W.gemm()
+        dims = dict(i=512, j=512, k=512)
+        base = enumerate_candidates(wl, dims, GEMM_SP, HW)
+        tiled = enumerate_candidates(wl, dims, GEMM_SP, HW, tile_search=True)
+        assert len(tiled) > len(base)
+        # base candidates come first within each (spatial, facs, order) group
+        assert set((c.spatial_idx, c.facs, c.temporal) for c in base) <= \
+            set((c.spatial_idx, c.facs, c.temporal) for c in tiled)
+
+
+class TestKernelsAgainstScalar:
+    def test_layer_perf_is_batch_of_one(self):
+        """The scalar API wraps the batched kernels: a hand-built dataflow
+        must score identically through both entry points."""
+        from repro.core.dataflow import build_dataflow
+        from repro.core.mapper_batch import evaluate_batch
+
+        wl = W.gemm()
+        dims = dict(i=64, j=2048, k=64)
+        m = best_mapping(wl, dims, GEMM_SP, HW)
+        p = layer_perf(wl, m.dataflow, HW, true_sizes=dims)
+        assert p.cycles == m.perf.cycles
+        assert p.energy_pj == m.perf.energy_pj
+
+        df = build_dataflow(wl, spatial=[("i", 16), ("j", 16)],
+                            temporal=[("k", 64), ("i", 4), ("j", 128)],
+                            c=(1, 1), name="hand")
+        p2 = layer_perf(wl, df, HW, true_sizes=dims)
+        assert p2.cycles > 0 and p2.energy_pj > 0
+
+
+class TestParallelSweepDeterminism:
+    @pytest.mark.parametrize("strategy", ["exhaustive", "evolutionary"])
+    def test_frontier_independent_of_worker_count(self, strategy):
+        from repro.configs import get_config
+        from repro.dse import Evaluator, MappingCache, SPACES, run_search
+        from repro.dse.evaluate import lower_config
+
+        zoo = {n: lower_config(get_config(n, reduced=True), seq=32)
+               for n in ("gemma_7b",)}
+        results = {}
+        for workers in (1, 2):
+            ev = Evaluator(zoo=zoo, cache=MappingCache())
+            kw = (dict(population=4, generations=2)
+                  if strategy == "evolutionary" else {})
+            results[workers] = run_search(SPACES["tiny"], ev,
+                                          strategy=strategy,
+                                          workers=workers, **kw)
+            # worker-computed entries merged back into the parent cache
+            assert len(ev.cache) > 0
+        a, b = results[1], results[2]
+        assert [e.point.name for e in a.evals] == \
+            [e.point.name for e in b.evals]
+        assert [e.cycles for e in a.evals] == [e.cycles for e in b.evals]
+        assert [e.point.name for e in a.frontier] == \
+            [e.point.name for e in b.frontier]
+        assert [(e.cycles, e.energy_pj, e.area_mm2) for e in a.frontier] == \
+            [(e.cycles, e.energy_pj, e.area_mm2) for e in b.frontier]
