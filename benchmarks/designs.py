@@ -14,7 +14,12 @@ from repro.core.adg import generate_adg
 from repro.core.dataflow import build_dataflow
 from repro.core.mapper import SpatialChoice
 
-__all__ = ["DESIGNS", "build_design", "design_spatials"]
+__all__ = ["DESIGNS", "SET_TO_DESIGN", "build_design", "design_spatials"]
+
+# which generated ADG realizes each DSE dataflow set (conv family shown in
+# the Fig. 12-style interconnect demo; GEMM menus share the same class)
+SET_TO_DESIGN = {"os": "Conv2d-OHOW", "ws": "Conv2d-ICOC",
+                 "switch": "Conv2d-MNICOC"}
 
 
 def _gemm_jk(P=16, name="gemm-jk"):

@@ -35,6 +35,37 @@ from repro.dse import (Evaluator, MappingCache, SPACES, format_frontier,
 from repro.dse.evaluate import DEFAULT_ZOO
 
 
+def emit_frontier_rtl(result, out_dir: str) -> dict:
+    """Emit one structural-Verilog netlist per wiring class on the frontier.
+
+    Every frontier design belongs to one of three dataflow sets
+    (``os``/``ws``/``switch``); each set is realized by a generated demo ADG
+    (:data:`benchmarks.designs.SET_TO_DESIGN`), so a sweep ends in
+    inspectable, simulable hardware instead of a dict of statistics."""
+    from benchmarks.designs import SET_TO_DESIGN, build_design
+    from repro.core.dag import codegen
+    from repro.core.emit import build_netlist
+    from repro.core.passes import run_backend
+
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts: dict[str, str] = {}
+    for ds in sorted({e.point.dataflow_set for e in result.frontier}):
+        design = SET_TO_DESIGN[ds]
+        t0 = time.perf_counter()
+        dag = codegen(build_design(design))
+        run_backend(dag)
+        nl = build_netlist(dag)
+        text = nl.verilog()
+        path = os.path.join(out_dir, f"{design}.v")
+        with open(path, "w") as f:
+            f.write(text)
+        st = nl.stats(text)
+        artifacts[ds] = path
+        print(f"  emitted {path} ({st['instances']} instances, "
+              f"{st['lines']} lines) in {time.perf_counter()-t0:.1f}s")
+    return artifacts
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--space", default="small", choices=sorted(SPACES))
@@ -61,6 +92,10 @@ def main(argv=None) -> int:
     ap.add_argument("--objective", default="cycles",
                     choices=["cycles", "energy", "edp"],
                     help="per-layer mapping-search objective")
+    ap.add_argument("--emit-dir", default=None, metavar="DIR",
+                    help="emit the frontier designs' wiring classes as "
+                         "structural Verilog into DIR; BENCH_dse.json "
+                         "frontier entries gain an 'rtl' artifact path")
     ap.add_argument("--out", default=os.path.join(_ROOT, "BENCH_dse.json"))
     ap.add_argument("--cache-path", default=None,
                     help="mapping-cache JSON (default: next to --out)")
@@ -127,11 +162,15 @@ def main(argv=None) -> int:
     print()
     print(format_frontier(result))
 
+    artifacts = None
+    if args.emit_dir:
+        artifacts = emit_frontier_rtl(result, args.emit_dir)
+
     wall = time.perf_counter() - t0
     meta = {"configs": configs, "seqs": seqs, "batch": args.batch,
             "objective": args.objective, "workers": args.workers,
             "strategy": result.strategy, "total_wall_s": wall}
-    write_bench_json(args.out, result, meta=meta)
+    write_bench_json(args.out, result, meta=meta, artifacts=artifacts)
     cs = result.cache_stats
     print(f"\nswept {result.n_designs} designs x {len(zoo)} configs in "
           f"{wall:.1f}s (workers={args.workers}; mapper cache: "

@@ -24,18 +24,26 @@ sys.path.insert(0, ".")
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 os.pardir, "src"))
 
-from benchmarks.designs import build_design
+from benchmarks.designs import SET_TO_DESIGN, build_design
 from benchmarks.e2e import run_network_gemmini, run_network_lego
 from benchmarks.nn_workloads import NETWORKS
 from repro.core.cost import design_area_mm2, design_power_mw
 from repro.core.dag import codegen
+from repro.core.emit import build_netlist
 from repro.core.passes import run_backend
 from repro.dse import DesignPoint, Evaluator, MappingCache
 
-# which generated ADG realizes each DSE dataflow set (conv family shown in
-# the Fig. 12-style interconnect demo; GEMM menus share the same class)
-_SET_TO_DESIGN = {"os": "Conv2d-OHOW", "ws": "Conv2d-ICOC",
-                  "switch": "Conv2d-MNICOC"}
+
+def emit_rtl(dag, path: str) -> None:
+    """Write the optimized DAG as structural Verilog and report its size."""
+    nl = build_netlist(dag)
+    text = nl.verilog()
+    with open(path, "w") as f:
+        f.write(text)
+    st = nl.stats(text)
+    print(f"  emitted {path}: {st['modules']} modules, "
+          f"{st['instances']} instances, {st['lines']} lines "
+          f"(datapath + 1 ctrl module per dataflow + df_sel top)")
 
 
 def pick_dse_design(path: str, objective: str) -> DesignPoint:
@@ -53,7 +61,7 @@ def pick_dse_design(path: str, objective: str) -> DesignPoint:
                        dataflow_set=d["dataflow_set"])
 
 
-def run_paper_design(net: str) -> None:
+def run_paper_design(net: str, emit: str | None = None) -> None:
     """The original Fig. 11/12 miniature: LEGO-MNICOC at 256 FUs."""
     t0 = time.time()
     print("== generating LEGO-MNICOC (256 FUs, fused OH-OW + IC-OC) ==")
@@ -62,6 +70,8 @@ def run_paper_design(net: str) -> None:
     run_backend(dag)
     print(f"  generation time: {time.time()-t0:.1f}s "
           f"(paper: 28.7s at 256 FUs)")
+    if emit:
+        emit_rtl(dag, emit)
     banks = sum(b.total_banks for b in adg.banking.values())
     area = design_area_mm2(dag, 256 * 1024, banks)
     power = design_power_mw(dag, 256 * 1024, sram_bytes_per_cycle=64)
@@ -80,7 +90,8 @@ def run_paper_design(net: str) -> None:
           f"(paper average: 3.2x / 2.4x)")
 
 
-def run_dse_design(point: DesignPoint, net: str, pick: str) -> None:
+def run_dse_design(point: DesignPoint, net: str, pick: str,
+                   emit: str | None = None) -> None:
     """Score a DSE-picked design on ``net`` the way the sweep scored it:
     its own dataflow set, √N data-node estimate, closed-form area/power."""
     print(f"== DSE pick (min {pick}): {point.name} ==")
@@ -88,7 +99,7 @@ def run_dse_design(point: DesignPoint, net: str, pick: str) -> None:
           f"{point.dram_gbps:g} GB/s, dataflow set {point.dataflow_set!r}")
 
     t0 = time.time()
-    design_name = _SET_TO_DESIGN[point.dataflow_set]
+    design_name = SET_TO_DESIGN[point.dataflow_set]
     print(f"== generating {design_name} interconnect "
           f"(16x16 demo of the {point.dataflow_set!r} wiring class) ==")
     adg = build_design(design_name)
@@ -96,6 +107,8 @@ def run_dse_design(point: DesignPoint, net: str, pick: str) -> None:
     run_backend(dag)
     print(f"  generation time: {time.time()-t0:.1f}s "
           f"(paper: 28.7s at 256 FUs)")
+    if emit:
+        emit_rtl(dag, emit)
 
     e = Evaluator(zoo={net: NETWORKS[net]()},
                   cache=MappingCache()).evaluate(point)
@@ -117,6 +130,9 @@ def main():
     ap.add_argument("--pick", default="cycles",
                     choices=["cycles", "energy", "area", "edp"],
                     help="frontier objective to minimize (with --dse)")
+    ap.add_argument("--emit-rtl", default=None, metavar="OUT.v",
+                    help="write the generated design as structural Verilog "
+                         "(datapath + per-dataflow control + df_sel top)")
     args = ap.parse_args()
 
     if args.dse:
@@ -124,9 +140,9 @@ def main():
             sys.exit(f"error: {args.dse} not found — run "
                      f"`python benchmarks/dse.py --space small` first")
         run_dse_design(pick_dse_design(args.dse, args.pick), args.net,
-                       args.pick)
+                       args.pick, emit=args.emit_rtl)
     else:
-        run_paper_design(args.net)
+        run_paper_design(args.net, emit=args.emit_rtl)
 
 
 if __name__ == "__main__":

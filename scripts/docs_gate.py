@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Docs gate: everything the docs point at must actually exist.
+
+Checked over ``docs/*.md`` and ``README.md``:
+
+1. every repo path referenced (``src/repro/...``, ``benchmarks/...``,
+   ``examples/...``, ``scripts/...``, ``tests/...``, ``docs/...``) resolves
+   to a file or directory (anchors and line suffixes stripped);
+2. every CLI command line referencing one of the documented entry points
+   parses — the script is invoked with ``--help`` once, and every
+   ``--flag`` the docs mention for it must appear in that help text.
+
+Run from the repo root: ``python scripts/docs_gate.py`` (exit 0 = clean).
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+DOC_FILES.append(os.path.join(ROOT, "README.md"))
+
+PATH_RE = re.compile(
+    r"\b((?:src/repro|benchmarks|examples|scripts|tests|docs)"
+    r"/[A-Za-z0-9_./-]*[A-Za-z0-9_/-])")
+
+CLI_SCRIPTS = ("benchmarks/dse.py", "examples/generate_accelerator.py",
+               "examples/quickstart.py", "benchmarks/run.py")
+FLAG_RE = re.compile(r"(--[a-z][a-z0-9-]*)")
+
+# flags that look like CLI flags in prose but belong to other tools
+FLAG_ALLOW = {"--help"}
+
+
+def fail(msgs: list[str]) -> int:
+    for m in msgs:
+        print(f"docs-gate: {m}", file=sys.stderr)
+    print(f"docs-gate: {len(msgs)} problem(s)", file=sys.stderr)
+    return 1
+
+
+def main() -> int:
+    problems: list[str] = []
+    flags_per_script: dict[str, set[str]] = {s: set() for s in CLI_SCRIPTS}
+
+    for path in DOC_FILES:
+        rel = os.path.relpath(path, ROOT)
+        with open(path) as f:
+            text = f.read()
+
+        for m in PATH_RE.finditer(text):
+            p = m.group(1).rstrip(".")
+            p = p.split("#")[0]
+            if not p or p.endswith("/"):
+                p = p.rstrip("/")
+            if not os.path.exists(os.path.join(ROOT, p)):
+                problems.append(f"{rel}: referenced path does not exist: {p}")
+
+        # associate documented flags with the CLI entry point on their line
+        for line in text.splitlines():
+            for script in CLI_SCRIPTS:
+                if script in line:
+                    flags_per_script[script].update(
+                        f for f in FLAG_RE.findall(line)
+                        if f not in FLAG_ALLOW)
+
+    for script, flags in flags_per_script.items():
+        cmd = [sys.executable, os.path.join(ROOT, script), "--help"]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        try:
+            out = subprocess.run(cmd, capture_output=True, text=True,
+                                 timeout=120, env=env, cwd=ROOT)
+        except subprocess.TimeoutExpired:
+            problems.append(f"{script}: --help timed out")
+            continue
+        if out.returncode != 0:
+            problems.append(f"{script}: --help exited "
+                            f"{out.returncode}: {out.stderr.strip()[:200]}")
+            continue
+        helptext = out.stdout
+        for flag in sorted(flags):
+            if flag not in helptext:
+                problems.append(
+                    f"{script}: docs reference flag {flag} "
+                    f"which --help does not list")
+
+    if problems:
+        return fail(problems)
+    n_paths = sum(len(PATH_RE.findall(open(p).read())) for p in DOC_FILES)
+    print(f"docs-gate OK: {len(DOC_FILES)} docs, {n_paths} path refs, "
+          f"{sum(map(len, flags_per_script.values()))} CLI flags verified")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -94,6 +94,81 @@ class ADG:
             "banks": {t: b.total_banks for t, b in self.banking.items()},
         }
 
+    # -- simulation support (shared by funcsim and rtlsim) ----------------
+    def reuse_table(self, df_name: str, tensor: str
+                    ) -> dict[tuple, tuple[np.ndarray, int]]:
+        """Minimum-depth spatial reuse generator per spatial offset Δs:
+        ``{Δs: (Δt, depth)}``.  This is the semantic meaning of a physical
+        link under ``df_name`` — the same table both simulators use to decide
+        which local timestep a forwarded operand belongs to."""
+        sol = self.solutions[(df_name, tensor)]
+        table: dict[tuple, tuple[np.ndarray, int]] = {}
+        for r in sol.reuses:
+            if r.is_spatial:
+                key = tuple(r.ds)
+                if key not in table or r.depth < table[key][1]:
+                    table[key] = (np.array(r.dt), r.depth)
+        return table
+
+    def feeders(self, df_name: str) -> dict[str, list]:
+        """Operand feed per (input tensor, FU) under ``df_name``:
+        ``("mem", None)`` for data nodes, ``("link", (src_fu, Δt))`` for
+        link-fed FUs (first matching physical link, minimum-depth reuse
+        semantics), ``("switch", None)`` for isolated FUs served through the
+        data-distribution switch every cycle (§III-C control plane)."""
+        spec = self.spec(df_name)
+        wl, df = spec.workload, spec.dataflow
+        coords = df.fu_coords()
+        n = df.n_fus
+        out: dict[str, list] = {}
+        for t in wl.inputs:
+            table = self.reuse_table(df_name, t.name)
+            plan = self.tensor_plans[t.name]
+            dns = set(plan.data_nodes.get(df_name, []))
+            fl: list = [None] * n
+            for f in dns:
+                fl[f] = ("mem", None)
+            for (u, v), link in plan.links.items():
+                if not any(k.split("#")[0] == df_name for k in link.users):
+                    continue
+                if fl[v] is not None:
+                    continue
+                ds = tuple((coords[v] - coords[u]).tolist())
+                ent = table.get(ds)
+                if ent is None:
+                    continue
+                fl[v] = ("link", (u, ent[0]))
+            for f in range(n):
+                if fl[f] is None:
+                    fl[f] = ("switch", None)
+            out[t.name] = fl
+        return out
+
+    def check_output_path(self, df_name: str) -> None:
+        """Structural psum-routing check: every FU must reach an output data
+        node of ``df_name`` through generated output links."""
+        spec = self.spec(df_name)
+        out_name = spec.workload.output.name
+        n = spec.dataflow.n_fus
+        oplan = self.tensor_plans[out_name]
+        sinks = set(oplan.data_nodes.get(df_name, []))
+        feeds: dict[int, list[int]] = {}
+        for (u, v), link in oplan.links.items():
+            if any(k.split("#")[0] == df_name for k in link.users):
+                feeds.setdefault(u, []).append(v)
+        reached = set(sinks)
+        changed = True
+        while changed:
+            changed = False
+            for u, vs in feeds.items():
+                if u not in reached and any(v in reached for v in vs):
+                    reached.add(u)
+                    changed = True
+        missing = set(range(n)) - reached
+        assert not missing, (
+            f"{out_name}: FUs {sorted(missing)[:8]} cannot commit under "
+            f"{df_name}")
+
 
 def generate_adg(
     specs: list[tuple[Workload, Dataflow]],

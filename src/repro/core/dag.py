@@ -16,7 +16,6 @@ therefore excluded from the delay-matching constraint system.
 
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -75,6 +74,12 @@ class DAG:
         # per-dataflow usage: node id -> set of dataflow names using it
         self.users: dict[int, set[str]] = {}
         self.dataflows: list[str] = []
+        # codegen provenance consumed by emit/rtlsim (empty for hand-built DAGs)
+        self.opnd_ports: dict[tuple[str, int], int] = {}  # (tensor, fu) -> nid
+        self.fu_product: dict[int, int] = {}  # fu -> final multiplier node
+        # last delay-matching potentials D (pins schedule components whose
+        # only coupling is elastic; see rtlsim._schedule)
+        self.sched: dict[int, float] = {}
 
     # -- construction ------------------------------------------------------
     def add(self, kind: str, bits: int = 16, users=None, **meta) -> int:
@@ -94,6 +99,14 @@ class DAG:
     # -- queries -----------------------------------------------------------
     def in_edges(self, nid: int) -> list[DAGEdge]:
         return [e for e in self.edges if e.dst == nid]
+
+    def in_edge_map(self) -> dict[int, list[DAGEdge]]:
+        """dst → in-edges (stable edge order) in one O(E) pass — use instead
+        of per-node :meth:`in_edges` scans when walking the whole graph."""
+        m: dict[int, list[DAGEdge]] = {nid: [] for nid in self.nodes}
+        for e in self.edges:
+            m[e.dst].append(e)
+        return m
 
     def out_edges(self, nid: int) -> list[DAGEdge]:
         return [e for e in self.edges if e.src == nid]
@@ -170,6 +183,14 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
     dag.dataflows = list(adg.dataflow_names)
     n_fus = adg.n_fus
 
+    _rtables: dict[tuple[str, str], dict] = {}
+
+    def _rtable(df_name: str, tensor: str) -> dict:
+        key = (df_name, tensor)
+        if key not in _rtables:
+            _rtables[key] = adg.reuse_table(df_name, tensor)
+        return _rtables[key]
+
     compute = {s.dataflow.name: s.workload.compute for s in adg.specs}
     any_mac2 = any(v == "mac2" for v in compute.values())
 
@@ -191,26 +212,32 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
     for tensor, plan in adg.tensor_plans.items():
         is_out = tensor in output_tensor.values()
         bits = acc_bits if is_out else data_bits
-        # sources entering each FU for this operand
-        srcs: dict[int, list[tuple[int, str, int, set]]] = {f: [] for f in range(n_fus)}
+        # sources entering each FU for this operand:
+        # (node-or-fu_out-ref, kind, depth, live dataflows, PhysicalLink)
+        srcs: dict[int, list[tuple]] = {f: [] for f in range(n_fus)}
 
         if not is_out:
             for dfn, dns in plan.data_nodes.items():
                 for f in dns:
                     mp = dag.add("memport", bits, users={dfn}, tensor=tensor,
                                  fu=f, direction="read")
-                    srcs[f].append((mp, "mem", 0, {dfn}))
+                    srcs[f].append((mp, "mem", 0, {dfn}, None))
 
         for (u, v), link in plan.links.items():
-            users = set(link.users)
             depths = link.users
             if link.kind == "direct" or link.kind == "direct+delay":
                 skew = max((d for k, d in depths.items() if "#" not in k),
                            default=0)
-                srcs[v].append((("fu_out", u), "link", skew, users))
+                # the wire/skew-reg path serves the plainly-keyed dataflows
+                live = {k for k in depths if "#" not in k}
+                srcs[v].append((("fu_out", u), "link", skew, live, link))
             if "delay" in link.kind:
                 depth = max(depths.values())
-                srcs[v].append((("fu_out", u), "fifo", depth, users))
+                # the FIFO path serves "#delay"-keyed dataflows (alongside a
+                # wire) or every user of a pure delay link
+                live = ({k.split("#")[0] for k in depths if "#" in k}
+                        if link.kind == "direct+delay" else set(depths))
+                srcs[v].append((("fu_out", u), "fifo", depth, live, link))
 
         plan.meta_srcs = srcs  # type: ignore[attr-defined]
         if is_out:
@@ -242,7 +269,7 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
         for f in range(n_fus):
             entries = srcs.get(f, [])
             resolved: list[int] = []
-            for src, kind, depth, users in entries:
+            for src, kind, depth, users, link in entries:
                 nid = src if isinstance(src, int) else (
                     fu_add[src[1]] if is_out else None)
                 if nid is None:
@@ -253,28 +280,44 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
                         nid = dag.add("wire", bits, users=users, tensor=tensor,
                                       fu=src[1], forward=True)
                         in_port[(tensor, src[1])] = nid
+                lmeta = {} if link is None else {
+                    "src_fu": link.src, "dst_fu": link.dst,
+                    "depths": {k: int(v) for k, v in sorted(link.users.items())}}
                 if kind == "fifo":
+                    # local-time delay per serving dataflow (t_scalar(Δt) of
+                    # the matching reuse) — drives the FIFO-realizability
+                    # rows of the delay-matching LP and the rtlsim delays
+                    dloc = {}
+                    for base in sorted(users):
+                        df_b = adg.spec(base).dataflow
+                        cds = df_b.fu_coords()
+                        ent = _rtable(base, tensor).get(
+                            tuple((cds[link.dst] - cds[link.src]).tolist()))
+                        if ent is not None:
+                            dloc[base] = int(df_b.t_scalar(ent[0]))
+                    lmeta["d_local"] = dloc
                     fifo = dag.add("fifo", bits, users=users, depth=depth,
-                                   tensor=tensor)
+                                   tensor=tensor, **lmeta)
                     dag.wire(nid, fifo, bits=bits)
                     nid = fifo
                 elif kind == "link" and depth > 0:
                     reg = dag.add("reg", bits, users=users, depth=depth,
-                                  tensor=tensor, skew=True)
+                                  tensor=tensor, skew=True, **lmeta)
                     dag.wire(nid, reg, bits=bits)
                     nid = reg
-                resolved.append(nid)
+                resolved.append((nid, users))
 
             if not resolved:
                 continue
             if len(resolved) > 1:
                 mux = dag.add("mux", bits, tensor=tensor, fu=f,
                               ways=len(resolved))
-                for r in resolved:
-                    dag.wire(r, mux, bits=bits)
+                for r, live in resolved:
+                    # per-input dataflow liveness drives the runtime select
+                    dag.wire(r, mux, bits=bits, live=tuple(sorted(live)))
                 port = mux
             else:
-                port = resolved[0]
+                port = resolved[0][0]
 
             if (tensor, f) in in_port:
                 # back-patch placeholder forward wires
@@ -294,9 +337,9 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
         if any_mac2 and len(ins) > 2:
             dag.wire(in_port[(ins[2], f)], fu_mul[f], bits=data_bits)
 
-        # output reduction / accumulation
-        for dfn in adg.dataflow_names:
-            ot = output_tensor[dfn]
+        # output reduction / accumulation (dedup: fused dataflows sharing one
+        # output tensor must not wire the same psum port twice)
+        for ot in dict.fromkeys(output_tensor.values()):
             if (ot, f) in in_port:
                 dag.wire(in_port[(ot, f)], fu_add[f], bits=acc_bits)
 
@@ -335,6 +378,9 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
         for n in dag.nodes.values():
             if (n.kind == "memport" and n.meta.get("tensor") == tensor
                     and dfn in dag.users[n.id]):
-                dag.wire(ag, n.id, bits=20)
+                dag.wire(ag, n.id, bits=20, addr=True)
 
+    # provenance for the netlist back end (emit/rtlsim)
+    dag.opnd_ports = dict(in_port)
+    dag.fu_product = dict(fu_mul)
     return dag

@@ -77,64 +77,14 @@ def simulate(adg: ADG, df_name: str, inputs: dict[str, np.ndarray]) -> SimResult
     R_T = df.R_T
 
     # --- structural check: every FU reaches an output data node -----------
-    out_name = wl.output.name
-    oplan = adg.tensor_plans[out_name]
-    sinks = set(oplan.data_nodes.get(df_name, []))
-    feeds: dict[int, list[int]] = {}
-    for (u, v), link in oplan.links.items():
-        if any(k.split("#")[0] == df_name for k in link.users):
-            feeds.setdefault(u, []).append(v)
-    reached = set(sinks)
-    changed = True
-    while changed:
-        changed = False
-        for u, vs in feeds.items():
-            if u not in reached and any(v in reached for v in vs):
-                reached.add(u)
-                changed = True
-    missing = set(range(n)) - reached
-    assert not missing, (
-        f"{out_name}: FUs {sorted(missing)[:8]} cannot commit under {df_name}")
+    adg.check_output_path(df_name)
 
-    # --- input feeders -----------------------------------------------------
+    # --- input feeders (shared §III-C control plane, see ADG.feeders) ------
     # feeder[tensor][f] = ("mem", None) | ("link", (src_fu, dt_vec))
-    feeders: dict[str, list] = {}
+    feeders = adg.feeders(df_name)
     fills = {t.name: 0 for t in wl.inputs}
     mem_reads = {t.name: 0 for t in wl.inputs}
     link_transfers = {t.name: 0 for t in wl.inputs}
-
-    reuse_by_ds: dict[str, dict[tuple, np.ndarray]] = {}
-    for t in wl.inputs:
-        sol = adg.solutions[(df_name, t.name)]
-        table = {}
-        for r in sol.reuses:
-            if r.is_spatial:
-                key = tuple(r.ds)
-                if key not in table or r.depth < table[key][1]:
-                    table[key] = (np.array(r.dt), r.depth)
-        reuse_by_ds[t.name] = table
-
-    for t in wl.inputs:
-        plan = adg.tensor_plans[t.name]
-        dns = set(plan.data_nodes.get(df_name, []))
-        fl = [None] * n
-        for f in dns:
-            fl[f] = ("mem", None)
-        for (u, v), link in plan.links.items():
-            if not any(k.split("#")[0] == df_name for k in link.users):
-                continue
-            if fl[v] is not None:
-                continue
-            ds = tuple((coords[v] - coords[u]).tolist())
-            ent = reuse_by_ds[t.name].get(ds)
-            if ent is None:
-                continue
-            fl[v] = ("link", (u, ent[0]))
-        for f in range(n):
-            if fl[f] is None:
-                # isolated FU without feed: served by the switch every cycle
-                fl[f] = ("switch", None)
-        feeders[t.name] = fl
 
     # --- cycle loop ----------------------------------------------------------
     hist: dict[str, np.ndarray] = {

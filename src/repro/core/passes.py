@@ -105,6 +105,31 @@ def delay_matching(dag: DAG, broadcast_virtual_cost: bool = False) -> DelayMatch
         w = max(e.bits for e in edges if e.src == u)
         c[aux_idx[u]] += w
 
+    # FIFO realizability: elastic links decouple timing but can only *add*
+    # delay, bounded by their capacity.  For a codegen FIFO fed from u with
+    # consumer v, the runtime-programmed delay under dataflow d is
+    # p_d = D_v − L_v − D_u + d_local(d); require 0 ≤ p_d ≤ CAP so the
+    # schedule the LP picks stays physically realizable (rtlsim executes
+    # exactly these delays and re-checks them).
+    for nid, node in dag.nodes.items():
+        if not node.elastic:
+            continue
+        dloc = node.meta.get("d_local")
+        if not dloc:
+            continue
+        cap = max(1, int(node.meta.get("depth", 1)))
+        for ein in dag.in_edges(nid):
+            if dag.nodes[ein.src].elastic or ein.src not in idx:
+                continue
+            for eout in dag.out_edges(nid):
+                if dag.nodes[eout.dst].elastic or eout.dst not in idx:
+                    continue
+                lu, lv = idx[ein.src], idx[eout.dst]
+                Lv = dag.nodes[eout.dst].latency
+                for dl in dloc.values():
+                    add_row([(lu, 1.0), (lv, -1.0)], float(dl - Lv))
+                    add_row([(lv, 1.0), (lu, -1.0)], float(cap - dl + Lv))
+
     A = sp.csr_matrix((vals, (rows, cols)), shape=(len(b), n_var))
     res = sopt.linprog(c, A_ub=A, b_ub=np.array(b),
                        bounds=[(0, None)] * n_var, method="highs")
@@ -118,6 +143,7 @@ def delay_matching(dag: DAG, broadcast_virtual_cost: bool = False) -> DelayMatch
         e.el = int(round(el))
         assert e.el >= -1e-6
         total_bits += e.el * e.bits
+    dag.sched = D
     return DelayMatchResult(int(total_bits), D)
 
 
@@ -166,7 +192,7 @@ def broadcast_rewire(dag: DAG, min_fanout: int = 3) -> RewireResult:
             w = dag.add("wire", e.bits, users=dag.users.get(e.dst, None),
                         rewire_tap=True)
             dag.wire(prev, w, bits=e.bits, rewired=True)
-            dag.wire(w, e.dst, bits=e.bits, rewired=True)
+            dag.wire(w, e.dst, bits=e.bits, **{**e.meta, "rewired": True})
             prev = w
 
     after = delay_matching(dag).register_bits
@@ -423,11 +449,18 @@ def infer_bitwidths(dag: DAG, data_bits: int = 8, max_accum: int = 4096) -> int:
 
 def run_backend(dag: DAG, optimize: bool = True, data_bits: int = 8) -> dict:
     """Full back-end pipeline.  ``optimize=False`` is the Fig. 10 baseline:
-    delay matching only (mandatory for timing correctness)."""
+    delay matching only (mandatory for timing correctness).
+
+    The final :func:`delay_matching` call leaves the DAG emit-ready: every
+    edge carries its register count (``el``) and ``dag.sched`` holds the LP
+    potentials — :func:`repro.core.emit.emit_netlist` renders the result as
+    structural Verilog and :func:`repro.core.rtlsim.simulate_rtl` executes
+    and re-verifies it."""
     report: dict = {}
     if not optimize:
         r = delay_matching(dag)
         report["register_bits"] = r.register_bits
+        report["pipeline_depth"] = _depth(r)
         return report
     red = extract_reduction_trees(dag)
     report["reduction"] = red.__dict__
@@ -439,4 +472,10 @@ def run_backend(dag: DAG, optimize: bool = True, data_bits: int = 8) -> dict:
     report["bits_saved"] = infer_bitwidths(dag, data_bits)
     r = delay_matching(dag)
     report["register_bits"] = r.register_bits
+    report["pipeline_depth"] = _depth(r)
     return report
+
+
+def _depth(r: DelayMatchResult) -> int:
+    """Array fill latency implied by the delay-matching potentials."""
+    return int(round(max(r.D.values()) - min(r.D.values()))) if r.D else 0

@@ -1,0 +1,391 @@
+"""Cycle-accurate netlist-level simulation of the emitted DAG.
+
+Where :mod:`repro.core.funcsim` simulates the *FU-level* ADG semantics, this
+module executes the *primitive-level* netlist the back end emits
+(:mod:`repro.core.emit`): every DAG node steps with its hardware latency,
+every delay-matching register chain (``edge.el``) delays its wire, skew
+registers and FIFOs delay forwarded operands, and runtime mux selects /
+FIFO depths come from the same per-dataflow control words the Verilog
+control modules carry.  The simulation is NumPy-vectorized over the time
+axis — each node's full value stream is materialized cycle by cycle.
+
+What is verified, and how:
+
+* **Delay matching (Eq. 10/11)** — a wall-clock schedule ``S`` is derived
+  from the netlist itself (``S[dst] = S[src] + EL + latency`` along every
+  edge); any join whose input arrivals disagree raises
+  :class:`RTLTimingError`.  The LP's registers are thus *executed*, not just
+  counted.
+* **Interconnect topology + FIFO depths** — operand values only travel
+  through the generated links; the elastic FIFO's physically required delay
+  is checked against its programmed capacity.
+* **Bit-exact results** — read memory ports are driven by a behavioral
+  memory model (the testbench answers the generated address stream with the
+  tensor value of the scheduled timestep), boundary fills are injected
+  through the data-distribution-switch model exactly as in funcsim, and the
+  committed output must equal :func:`repro.core.funcsim.oracle`.
+
+Like funcsim, psum *routing* is checked structurally
+(:meth:`ADG.check_output_path`) while products are committed through the
+output affine map — the scoreboard side of the testbench; the adder /
+accumulator / reduction-tree plane still executes cycle-by-cycle.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .adg import ADG
+from .dag import DAG
+from .emit import fifo_depth_for, fifo_programmed_delay, mux_select
+
+__all__ = ["RTLSimResult", "RTLTimingError", "simulate_rtl"]
+
+
+class RTLTimingError(AssertionError):
+    """The netlist is not consistently delay-matched / FIFO-sized."""
+
+
+@dataclass
+class RTLSimResult:
+    output: np.ndarray
+    cycles: int                 # wall-clock cycles simulated
+    pipeline_depth: int         # max schedule offset (fill latency)
+    fills: dict[str, int]       # switch-served boundary fills per tensor
+    mem_reads: dict[str, int]
+    link_transfers: dict[str, int]
+    checks: dict                # joins verified, fifo delays, overrides
+
+
+def _active(users: set[str], df_name: str) -> bool:
+    return any(u.split("#")[0] == df_name for u in users)
+
+
+def _active_in(dag: DAG, df_name: str, cut_ports: set[int], in_map):
+    """Value-dependency edges per node under the *active* dataflow.
+
+    Fused designs may wire forwarding links in both directions between two
+    FUs (one per dataflow) — a structural cycle that real hardware resolves
+    because the runtime muxes deselect the inactive direction.  The stream
+    evaluator mirrors that: a mux depends only on its selected input, an
+    idle FIFO is cut, and a port served entirely by the distribution switch
+    needs no upstream value at all."""
+
+    def deps(nid: int) -> list:
+        node = dag.nodes[nid]
+        ins = in_map[nid]
+        if nid in cut_ports:
+            return []
+        if node.kind == "mux":
+            sel = mux_select(dag, nid, df_name, edges=ins)
+            return [ins[sel]] if ins else []
+        if node.kind == "fifo" and fifo_depth_for(node.meta, df_name) is None:
+            return []
+        return ins
+
+    return deps
+
+
+def _toposort_active(dag: DAG, deps) -> list[int]:
+    """Topological order over the active value-dependency edges."""
+    indeg = {nid: len(deps(nid)) for nid in dag.nodes}
+    consumers: dict[int, list[int]] = {nid: [] for nid in dag.nodes}
+    for nid in dag.nodes:
+        for e in deps(nid):
+            consumers[e.src].append(nid)
+    from collections import deque
+    q = deque(nid for nid in sorted(dag.nodes) if indeg[nid] == 0)
+    order = []
+    while q:
+        u = q.popleft()
+        order.append(u)
+        for v in consumers[u]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                q.append(v)
+    if len(order) != len(dag.nodes):
+        raise RTLTimingError(
+            "emitted DAG has a value cycle under the active dataflow; "
+            "cannot stream-simulate")
+    return order
+
+
+def _schedule(dag: DAG) -> tuple[dict[int, int], dict]:
+    """Wall-clock arrival offset per node, re-derived from the netlist.
+
+    Every non-elastic edge ``u → v`` imposes the *equality*
+    ``S[v] = S[u] + latency(v) + EL`` — the delay-matching property.  The
+    offsets are assigned by BFS over the undirected equality graph and every
+    redundant (non-tree) edge is checked exactly: a single wrong EL anywhere
+    raises :class:`RTLTimingError`.  Components coupled only through elastic
+    FIFOs are pinned with the LP potentials ``dag.sched`` (the FIFO-
+    realizability rows of the LP keep that pinning feasible); FIFO nodes
+    themselves are anchored from their consumer, so their programmed delay
+    absorbs the inter-component skew exactly as in hardware.
+    """
+    from collections import deque
+
+    adj: dict[int, list[tuple[int, int]]] = {nid: [] for nid in dag.nodes}
+    n_eq = 0
+    for e in dag.edges:
+        if dag.nodes[e.src].elastic or dag.nodes[e.dst].elastic:
+            continue
+        delta = dag.nodes[e.dst].latency + e.el
+        adj[e.src].append((e.dst, delta))
+        adj[e.dst].append((e.src, -delta))
+        n_eq += 1
+
+    S: dict[int, int] = {}
+    joins_checked = 0
+    for start in sorted(dag.nodes):
+        if start in S or dag.nodes[start].elastic:
+            continue
+        S[start] = int(round(dag.sched.get(start, 0)))
+        q = deque([start])
+        while q:
+            u = q.popleft()
+            for v, delta in adj[u]:
+                want = S[u] + delta
+                if v in S:
+                    joins_checked += 1
+                    if S[v] != want:
+                        raise RTLTimingError(
+                            f"delay-matching violated between nodes {u} and "
+                            f"{v}: arrival {S[v]} != {want}")
+                else:
+                    S[v] = want
+                    q.append(v)
+
+    # elastic nodes: anchored from their (non-elastic) consumer side
+    for nid in sorted(dag.nodes):
+        if not dag.nodes[nid].elastic:
+            continue
+        outs = [e for e in dag.out_edges(nid) if e.dst in S]
+        if outs:
+            e = outs[0]
+            S[nid] = S[e.dst] - dag.nodes[e.dst].latency - e.el
+        else:
+            ins = dag.in_edges(nid)
+            S[nid] = S[ins[0].src] if ins and ins[0].src in S else 0
+
+    shift = -min(S.values())
+    S = {nid: s + shift for nid, s in S.items()}
+    return S, {"joins_checked": joins_checked, "equality_edges": n_eq}
+
+
+def simulate_rtl(dag: DAG, adg: ADG, df_name: str,
+                 inputs: dict[str, np.ndarray]) -> RTLSimResult:
+    """Execute the emitted netlist under dataflow ``df_name``.
+
+    ``dag`` must come from :func:`repro.core.dag.codegen` (it carries the
+    operand-port provenance) and be delay-matched — run
+    :func:`repro.core.passes.run_backend` (or ``delay_matching``) first.
+    """
+    if not dag.opnd_ports:
+        raise ValueError("DAG carries no operand-port provenance; "
+                         "simulate_rtl needs a codegen-produced DAG")
+    spec = adg.spec(df_name)
+    wl, df = spec.workload, spec.dataflow
+    T, n = df.total_cycles, df.n_fus
+    coords = df.fu_coords()
+    R_T = df.R_T
+
+    adg.check_output_path(df_name)
+    feeders = adg.feeders(df_name)
+
+    # --- testbench: local timesteps, operand values, boundary-fill masks ---
+    TV = _time_vectors(T, R_T)
+    i_base_all = TV @ df.M_TI.T  # (T, n_iter)
+    SC = coords @ df.M_SI.T      # (n, n_iter)
+
+    VAL: dict[str, np.ndarray] = {}
+    fill_mask: dict[str, np.ndarray] = {}
+    for t in wl.inputs:
+        fmap = t.fmap
+        arr = inputs[t.name]
+        v = np.empty((T, n), dtype=np.float64)
+        for f in range(n):
+            d = fmap(i_base_all + SC[f])
+            v[:, f] = arr[tuple(d[:, i] for i in range(d.shape[1]))]
+        VAL[t.name] = v
+        m = np.zeros((T, n), dtype=bool)
+        for f, (kind, info) in enumerate(feeders[t.name]):
+            if kind == "switch":
+                m[:, f] = True
+            elif kind == "link":
+                _, dt_vec = info
+                tsrc = TV - np.asarray(dt_vec)
+                m[:, f] = ~np.all((tsrc >= 0) & (tsrc < R_T), axis=1)
+        fill_mask[t.name] = m
+
+    # --- switch-model overrides at the operand ports -----------------------
+    overrides: dict[int, list[tuple[str, int]]] = {}
+    cut_ports: set[int] = set()  # ports served entirely by the switch
+    input_names = {t.name for t in wl.inputs}
+    for (tensor, f), nid in dag.opnd_ports.items():
+        if tensor not in input_names:
+            continue
+        kind, _ = feeders[tensor][f]
+        if kind == "mem":
+            continue
+        if fill_mask[tensor][:, f].any():
+            claims = overrides.setdefault(nid, [])
+            if claims:
+                raise RTLTimingError(
+                    f"operand port node {nid} shared by {claims} and "
+                    f"({tensor}, {f}) needs conflicting fill injection")
+            claims.append((tensor, f))
+            if kind == "switch":
+                cut_ports.add(nid)
+
+    in_map = dag.in_edge_map()
+    deps = _active_in(dag, df_name, cut_ports, in_map)
+    order = _toposort_active(dag, deps)
+    S, checks = _schedule(dag)
+    W_total = max(S.values()) + T + 2
+
+    # --- programmed FIFO delays -------------------------------------------
+    fifo_delay: dict[int, int] = {}
+    tables = {t.name: adg.reuse_table(df_name, t.name) for t in wl.tensors}
+    fifo_report: dict[int, dict] = {}
+    for nid in order:
+        node = dag.nodes[nid]
+        if node.kind != "fifo":
+            continue
+        ins = in_map[nid]
+        cap = max(1, int(node.meta.get("depth", 1)))
+        active = fifo_depth_for(node.meta, df_name) is not None
+        if not active or not ins:
+            fifo_delay[nid] = cap
+            continue
+        sf, dfu = node.meta.get("src_fu"), node.meta.get("dst_fu")
+        tensor = node.meta.get("tensor")
+        if df_name in node.meta.get("d_local", {}):
+            d_local = int(node.meta["d_local"][df_name])
+        else:
+            ent = tables.get(tensor, {}).get(
+                tuple((coords[dfu] - coords[sf]).tolist()))
+            if ent is None:
+                raise RTLTimingError(
+                    f"fifo {nid} ({tensor} {sf}->{dfu}) active under "
+                    f"{df_name} but no reuse generator matches its offset")
+            d_local = df.t_scalar(ent[0])
+        p = S[nid] - S[ins[0].src] + d_local
+        if p < 0:
+            raise RTLTimingError(
+                f"fifo {nid} needs negative delay {p} under {df_name}")
+        if p > cap:
+            raise RTLTimingError(
+                f"fifo {nid} needs delay {p} > capacity {cap} "
+                f"under {df_name}")
+        word = fifo_programmed_delay(dag, nid, df_name)
+        if word is not None and word != p:
+            raise RTLTimingError(
+                f"fifo {nid}: emitted cfg word {word} != physically "
+                f"required delay {p} under {df_name}")
+        fifo_delay[nid] = p
+        fifo_report[nid] = {"delay": p, "capacity": cap,
+                            "programmed": word}
+
+    # --- stream evaluation -------------------------------------------------
+    streams: dict[int, np.ndarray] = {}
+
+    def shifted(arr: np.ndarray, k: int) -> np.ndarray:
+        if k <= 0:
+            return arr
+        out = np.zeros_like(arr)
+        out[k:] = arr[:-k]
+        return out
+
+    t_idx = np.arange(T)
+    for nid in order:
+        node = dag.nodes[nid]
+        L = node.latency
+        ins = deps(nid)  # active value dependencies only
+
+        def inp(e) -> np.ndarray:
+            return shifted(streams[e.src], L + e.el)
+
+        kind = node.kind
+        if kind == "memport" and node.meta.get("direction") == "read":
+            s = np.zeros(W_total)
+            if _active(dag.users.get(nid, set()), df_name):
+                tensor, f = node.meta["tensor"], node.meta["fu"]
+                s[S[nid] + t_idx] = VAL[tensor][:, f]
+            streams[nid] = s
+        elif kind == "counter":
+            s = np.zeros(W_total)
+            s[S[nid] + t_idx] = t_idx
+            streams[nid] = s
+        elif kind == "mul":
+            vals = [inp(e) for e in ins]
+            s = vals[0].copy() if vals else np.zeros(W_total)
+            for v in vals[1:]:
+                s *= v
+            streams[nid] = s
+        elif kind in ("add", "reduce"):
+            vals = [inp(e) for e in ins]
+            s = vals[0].copy() if vals else np.zeros(W_total)
+            for v in vals[1:]:
+                s += v
+            streams[nid] = s
+        elif kind == "acc":
+            s = inp(ins[0]) if ins else np.zeros(W_total)
+            streams[nid] = np.cumsum(s)
+        elif kind == "mux":
+            # deps() already reduced a mux to its selected input
+            streams[nid] = (inp(ins[0]).copy() if ins
+                            else np.zeros(W_total))
+        elif kind == "fifo":
+            base = streams[ins[0].src] if ins else np.zeros(W_total)
+            streams[nid] = shifted(base, fifo_delay.get(nid, 1))
+        elif kind in ("reg", "shift"):
+            s = (shifted(streams[ins[0].src], ins[0].el) if ins
+                 else np.zeros(W_total))
+            streams[nid] = shifted(s, max(1, int(node.meta.get("depth", 1))))
+        else:  # wire / lut / memport-write / addrgen / input / output / const
+            streams[nid] = (inp(ins[0]).copy() if ins
+                            else np.zeros(W_total))
+            if kind == "const":
+                streams[nid][:] = float(node.meta.get("value", 0))
+
+        # data-distribution-switch model: boundary fills forced at the port
+        for tensor, f in overrides.get(nid, ()):
+            m = fill_mask[tensor][:, f]
+            streams[nid][S[nid] + t_idx[m]] = VAL[tensor][m, f]
+
+    # --- commit (scoreboard): FU products through the output map ----------
+    out_shape = wl.tensor_shape(wl.output, df.sizes())
+    out = np.zeros(out_shape, dtype=np.float64)
+    P = np.empty((T, n), dtype=np.float64)
+    for f in range(n):
+        mid = dag.fu_product[f]
+        P[:, f] = streams[mid][S[mid] + t_idx]
+    d_out = wl.output.fmap(i_base_all[:, None, :] + SC[None, :, :])
+    np.add.at(out, tuple(d_out[..., i] for i in range(d_out.shape[-1])), P)
+
+    fills = {t.name: int(fill_mask[t.name].sum()) for t in wl.inputs}
+    mem_reads = {t.name: T * sum(1 for k, _ in feeders[t.name]
+                                 if k == "mem") for t in wl.inputs}
+    link_transfers = {
+        t.name: int(sum((~fill_mask[t.name][:, f]).sum()
+                        for f, (k, _) in enumerate(feeders[t.name])
+                        if k == "link"))
+        for t in wl.inputs}
+    checks["fifos"] = fifo_report
+    checks["overridden_ports"] = sum(len(v) for v in overrides.values())
+    return RTLSimResult(out, W_total, max(S.values()), fills, mem_reads,
+                        link_transfers, checks)
+
+
+def _time_vectors(T: int, R_T: np.ndarray) -> np.ndarray:
+    """All local timestep vectors 0..T-1 as mixed-radix digits, (T, n_T)."""
+    R_T = np.asarray(R_T, dtype=np.int64)
+    out = np.empty((T, len(R_T)), dtype=np.int64)
+    t = np.arange(T, dtype=np.int64)
+    for k in range(len(R_T) - 1, -1, -1):
+        out[:, k] = t % R_T[k]
+        t = t // R_T[k]
+    return out

@@ -43,8 +43,22 @@ def format_frontier(result: SearchResult) -> str:
 
 
 def write_bench_json(path: str, result: SearchResult,
-                     meta: dict | None = None) -> dict:
-    """Dump the sweep to ``BENCH_dse.json`` (atomic write); returns payload."""
+                     meta: dict | None = None,
+                     artifacts: dict | None = None) -> dict:
+    """Dump the sweep to ``BENCH_dse.json`` (atomic write); returns payload.
+
+    ``artifacts`` maps a dataflow set (``os``/``ws``/``switch``) to an
+    emitted Verilog netlist path (``benchmarks/dse.py --emit-dir``); each
+    frontier entry gains an ``rtl`` key pointing at the netlist of its
+    wiring class."""
+    def entry(e: DesignEval) -> dict:
+        d = e.as_dict()
+        if artifacts:
+            rtl = artifacts.get(e.point.dataflow_set)
+            if rtl:
+                d["rtl"] = rtl
+        return d
+
     payload = {
         "bench": "dse",
         "space": result.space,
@@ -53,8 +67,9 @@ def write_bench_json(path: str, result: SearchResult,
         "wall_s": result.wall_s,
         "cache": result.cache_stats,
         "meta": meta or {},
-        "frontier": [e.as_dict() for e in result.frontier],
-        "designs": [e.as_dict() for e in result.evals],
+        "artifacts": artifacts or {},
+        "frontier": [entry(e) for e in result.frontier],
+        "designs": [entry(e) for e in result.evals],
         "best": {obj: result.best(obj).point.name
                  for obj in ("cycles", "energy", "area", "edp")},
     }

@@ -154,7 +154,11 @@ class TestEmit:
         dag = codegen(adg)
         run_backend(dag)
         text = emit_netlist(dag)
-        assert "module tpu" in text
-        assert text.count("mul_u") == 16
-        assert "addrgen_u" in text
+        assert "module tpu (" in text          # top with the df_sel fabric
+        assert "module tpu_dp (" in text       # shared datapath
+        assert "module tpu_ctrl_gemm_jk (" in text  # one ctrl per dataflow
+        # 16 multiplier instances of the primitive library, named ports
+        assert text.count("lego_mul #(.W") == 16
+        assert "lego_addrgen" in text
         assert "endmodule" in text
+        assert "pipe(" not in text             # old pseudo-netlist constructs
