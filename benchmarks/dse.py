@@ -1,8 +1,20 @@
 """Design-space exploration CLI: sweep candidate accelerators over the model
-zoo, print the Pareto frontier, dump ``BENCH_dse.json``.
+zoo, print the Pareto frontier, dump ``BENCH_dse.json`` — or, with
+``--models``, run the paper's cross-model study ("one generated architecture
+for diverse modern foundation models") and dump ``BENCH_models.json`` with a
+single cross-model winner design.
 
 Run:  python benchmarks/dse.py --space small
       python benchmarks/dse.py --space large --workers 4
+      python benchmarks/dse.py --models all --quick
+
+Model configs lower through the graph frontend (:mod:`repro.frontend`):
+attention (incl. GQA/MQA and sliding windows), MoE experts, SSM scans as
+real depthwise convs, RWKV mixes, encoder-decoder cross-attention and
+vision/audio conv stems, with ``--phases prefill,decode`` scoring both the
+throughput-bound prefill pass and the latency-bound decode step.  In
+``--models`` mode every zoo entry is also scored on the Gemmini baseline
+and the winner maximizes the geometric-mean speedup across models.
 
 Layer mappings are solved by the batched NumPy engine (all candidates of a
 layer batch in one broadcasted perf-kernel pass) and ``--workers N`` fans
@@ -14,6 +26,8 @@ prefill lengths in one sweep; ``--space large`` defaults to ``512,4096``.
 Re-runs hit the persistent mapping cache (``.dse_mapping_cache.json`` next to
 the output file by default) and skip the mapper entirely for already-seen
 (design, layer) pairs — worker-computed entries merge back on join.
+``--dry-run`` validates arguments and lowers the zoo, prints the sweep plan,
+and exits before any mapping search (used by ``scripts/docs_examples.py``).
 """
 
 from __future__ import annotations
@@ -28,11 +42,12 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
 
-from repro.configs import ARCH_IDS
+from repro.configs import ARCH_IDS, resolve_ids
 from repro.dse import (Evaluator, MappingCache, SPACES, format_frontier,
-                       format_scorecard, load_zoo, run_search,
-                       write_bench_json)
+                       format_models, format_scorecard, load_zoo, run_search,
+                       write_bench_json, write_models_json)
 from repro.dse.evaluate import DEFAULT_ZOO
+from repro.frontend import PHASES
 
 
 def emit_frontier_rtl(result, out_dir: str) -> dict:
@@ -68,9 +83,19 @@ def emit_frontier_rtl(result, out_dir: str) -> dict:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--space", default="small", choices=sorted(SPACES))
+    ap.add_argument("--space", default=None, choices=sorted(SPACES),
+                    help="design space (default: small; tiny with --quick)")
     ap.add_argument("--configs", default=",".join(DEFAULT_ZOO),
                     help="comma-separated repro.configs ids")
+    ap.add_argument("--models", default=None, metavar="IDS",
+                    help="cross-model mode: 'all' or a comma list of "
+                         "repro.configs ids — scores a Gemmini baseline per "
+                         "model and writes BENCH_models.json with the "
+                         "one-architecture winner (overrides --configs)")
+    ap.add_argument("--phases", default=None,
+                    help="execution phases to lower, comma list of "
+                         "prefill/decode (default: prefill; --models "
+                         "defaults to prefill,decode unless --quick)")
     ap.add_argument("--nets", default="",
                     help="also score benchmarks.nn_workloads networks "
                          "(comma-separated, e.g. MobileNetV2,ResNet50) — "
@@ -78,10 +103,17 @@ def main(argv=None) -> int:
                          "their mux area")
     ap.add_argument("--seq", default=None,
                     help="prefill sequence length(s) to score, comma list "
-                         "(default: 512; 512,4096 for --space large)")
+                         "(default: 512; 512,4096 for --space large; 256 "
+                         "with --quick)")
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--reduced", action="store_true",
                     help="use smoke() configs instead of full()")
+    ap.add_argument("--quick", action="store_true",
+                    help="sub-minute smoke sweep: tiny space, seq 256, "
+                         "prefill only (the check.sh cross-model budget)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="validate args + lower the zoo, print the sweep "
+                         "plan, exit before searching")
     ap.add_argument("--strategy", default="auto",
                     choices=["auto", "exhaustive", "evolutionary"])
     ap.add_argument("--workers", type=int, default=1,
@@ -96,7 +128,9 @@ def main(argv=None) -> int:
                     help="emit the frontier designs' wiring classes as "
                          "structural Verilog into DIR; BENCH_dse.json "
                          "frontier entries gain an 'rtl' artifact path")
-    ap.add_argument("--out", default=os.path.join(_ROOT, "BENCH_dse.json"))
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_dse.json, or "
+                         "BENCH_models.json with --models)")
     ap.add_argument("--cache-path", default=None,
                     help="mapping-cache JSON (default: next to --out)")
     ap.add_argument("--no-cache", action="store_true",
@@ -107,26 +141,43 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     t0 = time.perf_counter()
-    space = SPACES[args.space]
-    configs = [c for c in args.configs.split(",") if c]
+    space = SPACES[args.space or ("tiny" if args.quick else "small")]
+    if args.models:
+        try:
+            configs = resolve_ids(args.models)
+        except KeyError as e:
+            ap.error(str(e.args[0]))
+    else:
+        configs = [c for c in args.configs.split(",") if c]
+    if args.phases is None:
+        args.phases = ("prefill,decode" if args.models and not args.quick
+                       else "prefill")
+    phases = tuple(dict.fromkeys(p for p in args.phases.split(",") if p))
+    if not phases or any(p not in PHASES for p in phases):
+        ap.error(f"--phases expects a comma list of {'/'.join(PHASES)}, "
+                 f"got {args.phases!r}")
     if args.seq is None:
-        args.seq = "512,4096" if args.space == "large" else "512"
+        args.seq = ("256" if args.quick
+                    else "512,4096" if space.name == "large" else "512")
     try:
         seqs = list(dict.fromkeys(int(s) for s in args.seq.split(",") if s))
     except ValueError:
         ap.error(f"--seq expects a comma list of ints, got {args.seq!r}")
     if not seqs or any(s <= 0 for s in seqs):
         ap.error(f"--seq expects positive lengths, got {args.seq!r}")
+    out = args.out or os.path.join(
+        _ROOT, "BENCH_models.json" if args.models else "BENCH_dse.json")
     log = (lambda m: None) if args.quiet else (
         lambda m: print(f"  {m}", flush=True))
 
-    print(f"== DSE sweep: space={space.name} "
-          f"({space.raw_size} raw points), zoo={configs}, seq={seqs} ==")
+    mode = "cross-model study" if args.models else "DSE sweep"
+    print(f"== {mode}: space={space.name} ({space.raw_size} raw points), "
+          f"zoo={configs}, seq={seqs}, phases={list(phases)} ==")
     zoo = {}
     for seq in seqs:
         try:
             part = load_zoo(configs, seq=seq, batch=args.batch,
-                            reduced=args.reduced)
+                            reduced=args.reduced, phases=phases)
         except ModuleNotFoundError as e:
             ap.error(f"unknown config in --configs ({e.name}); "
                      f"known ids: {', '.join(ARCH_IDS)}")
@@ -142,16 +193,27 @@ def main(argv=None) -> int:
     n_layers = sum(len(v) for v in zoo.values())
     print(f"  lowered {len(zoo)} configs -> {n_layers} unique layer shapes")
 
+    if args.dry_run:
+        print(f"  dry run: would sweep {space.raw_size} raw design points "
+              f"(strategy={args.strategy}, workers={args.workers}) and "
+              f"write {out}")
+        return 0
+
     cache_path = None
     if not args.no_cache:
         cache_path = args.cache_path or os.path.join(
-            os.path.dirname(os.path.abspath(args.out)),
+            os.path.dirname(os.path.abspath(out)),
             ".dse_mapping_cache.json")
     cache = MappingCache(cache_path)
     if len(cache):
         print(f"  mapping cache: {len(cache)} entries from {cache_path}")
 
-    evaluator = Evaluator(zoo=zoo, cache=cache, objective=args.objective)
+    evaluator = Evaluator(zoo=zoo, cache=cache, objective=args.objective,
+                          baseline="gemmini" if args.models else None)
+    if args.models:
+        # baselines depend only on the zoo — score them once in the parent
+        # (workers recompute lazily from the same zoo, deterministically)
+        evaluator.baselines
     result = run_search(space, evaluator, strategy=args.strategy, log=log,
                         workers=args.workers,
                         max_exhaustive=args.max_exhaustive)
@@ -161,6 +223,9 @@ def main(argv=None) -> int:
     print(format_scorecard(result.evals, limit=args.top))
     print()
     print(format_frontier(result))
+    if args.models:
+        print()
+        print(format_models(result))
 
     artifacts = None
     if args.emit_dir:
@@ -168,13 +233,19 @@ def main(argv=None) -> int:
 
     wall = time.perf_counter() - t0
     meta = {"configs": configs, "seqs": seqs, "batch": args.batch,
-            "objective": args.objective, "workers": args.workers,
-            "strategy": result.strategy, "total_wall_s": wall}
-    write_bench_json(args.out, result, meta=meta, artifacts=artifacts)
+            "phases": list(phases), "objective": args.objective,
+            "workers": args.workers, "strategy": result.strategy,
+            "total_wall_s": wall}
+    if args.models:
+        write_models_json(out, result, model_ids=configs,
+                          baselines=evaluator.baselines, meta=meta,
+                          artifacts=artifacts)
+    else:
+        write_bench_json(out, result, meta=meta, artifacts=artifacts)
     cs = result.cache_stats
     print(f"\nswept {result.n_designs} designs x {len(zoo)} configs in "
           f"{wall:.1f}s (workers={args.workers}; mapper cache: "
-          f"{cs['hits']} hits / {cs['misses']} misses); wrote {args.out}")
+          f"{cs['hits']} hits / {cs['misses']} misses); wrote {out}")
     return 0
 
 

@@ -8,11 +8,22 @@ baseline (Fig. 12(b)).
 
 Configurations follow the paper: 224×224×3 inputs (384 for EfficientNetV2),
 BERT seq 16, GPT-2/LLaMA-7B prompt 1000 + 1 generated token.
+
+The CNN topologies below are hand-maintained tables (they are network
+architectures, not ``ModelConfig``s); the transformer entries (BERT, GPT-2,
+LLaMA-7B) are **derived from the model-graph frontend**
+(:func:`repro.frontend.lower_model`) so there is exactly one config→workload
+lowering in the repo — the ``NETWORKS`` keys stay the public interface for
+:mod:`benchmarks.e2e`.  ``lm_head=False`` keeps the paper's transformer-
+layers-only accounting.
 """
 
 from __future__ import annotations
 
-__all__ = ["NETWORKS", "Layer"]
+from repro.frontend import lower_model
+from repro.models.common import BlockSpec, ModelConfig
+
+__all__ = ["NETWORKS"]
 
 
 def conv(n, ic, oc, hw, k, s=1, rep=1, nt=None):
@@ -113,29 +124,30 @@ def _effnetv2_s():
     return layers
 
 
+def _transformer(name, d, n_heads, d_ff, n_layers, *, glu=False,
+                 activation="gelu"):
+    """Dense-transformer ModelConfig for the frontend lowering (the head
+    dim follows d_model // n_heads; MHA, no GQA — the paper's setups)."""
+    return ModelConfig(name=name, d_model=d, n_heads=n_heads,
+                       n_kv_heads=n_heads, d_ff=d_ff, glu=glu,
+                       activation=activation,
+                       layer_pattern=(BlockSpec(kind="attn"),),
+                       n_periods=n_layers)
+
+
+_BERT = _transformer("bert-base", 768, 12, 3072, 12)
+_GPT2 = _transformer("gpt2", 768, 12, 3072, 12)
+_LLAMA7B = _transformer("llama-7b", 4096, 32, 11008, 32, glu=True,
+                        activation="silu")
+
+
 def _bert_base(seq=16):
-    d, f, L = 768, 3072, 12
-    per_layer = [
-        gemm(seq, 3 * d, d),                 # QKV
-        gemm(seq, seq, 64, rep=12),          # scores per head
-        gemm(seq, 64, seq, rep=12),          # context per head
-        gemm(seq, d, d),                     # out proj
-        gemm(seq, f, d), gemm(seq, d, f),    # FFN
-    ]
-    return [(k, dd, rep * L, nt) for (k, dd, rep, nt) in per_layer]
+    return lower_model(_BERT, seq=seq, lm_head=False)
 
 
 def _gpt2(prompt=1000):
     # one-token decode against a 1000-token prompt (paper setup)
-    d, f, L, H = 768, 3072, 12, 12
-    per_layer = [
-        gemm(1, 3 * d, d),
-        gemm(1, prompt, 64, rep=H),
-        gemm(1, 64, prompt, rep=H),
-        gemm(1, d, d),
-        gemm(1, f, d), gemm(1, d, f),
-    ]
-    return [(k, dd, rep * L, nt) for (k, dd, rep, nt) in per_layer]
+    return lower_model(_GPT2, seq=prompt, phase="decode", lm_head=False)
 
 
 def _coatnet():
@@ -188,15 +200,8 @@ def _stable_diffusion():
 
 
 def _llama7b(bs=1, prompt=1000):
-    d, f, L, H = 4096, 11008, 32, 32
-    per_layer = [
-        gemm(bs, 3 * d, d),
-        gemm(bs, prompt, 128, rep=H),
-        gemm(bs, 128, prompt, rep=H),
-        gemm(bs, d, d),
-        gemm(bs, f, d), gemm(bs, d, f), gemm(bs, f, d),
-    ]
-    return [(k, dd, rep * L, nt) for (k, dd, rep, nt) in per_layer]
+    return lower_model(_LLAMA7B, seq=prompt, batch=bs, phase="decode",
+                       lm_head=False)
 
 
 NETWORKS = {

@@ -10,8 +10,15 @@ the frontier-best configuration instead — mapped with its own dataflow set
 and the same closed-form area/power model the sweep used, so the numbers
 printed here agree with the frontier entry it was picked from.
 
+``--model ID`` runs a foundation model from ``repro.configs`` instead of a
+CNN table: the config lowers through the model-graph frontend
+(:func:`repro.frontend.build_model_graph` — prefill *and* decode phases) and
+is scored on the generated architecture vs the Gemmini baseline.
+
 Run:  PYTHONPATH=src python examples/generate_accelerator.py [--net MobileNetV2]
       PYTHONPATH=src python examples/generate_accelerator.py --dse BENCH_dse.json
+      PYTHONPATH=src python examples/generate_accelerator.py \
+          --model llama4_scout_17b_a16e --emit-rtl out.v
 """
 
 import argparse
@@ -27,11 +34,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 from benchmarks.designs import SET_TO_DESIGN, build_design
 from benchmarks.e2e import run_network_gemmini, run_network_lego
 from benchmarks.nn_workloads import NETWORKS
+from repro.configs import get_config, resolve_ids
 from repro.core.cost import design_area_mm2, design_power_mw
 from repro.core.dag import codegen
 from repro.core.emit import build_netlist
 from repro.core.passes import run_backend
 from repro.dse import DesignPoint, Evaluator, MappingCache
+from repro.frontend import build_model_graph
 
 
 def emit_rtl(dag, path: str) -> None:
@@ -122,9 +131,62 @@ def run_dse_design(point: DesignPoint, net: str, pick: str,
           f"energy saving {gem.energy_pj/e.energy_pj:.2f}x")
 
 
+def run_model_design(model_id: str, seq: int, emit: str | None = None,
+                     point: DesignPoint | None = None) -> None:
+    """One generated architecture, one foundation model, both phases.
+
+    Lowers the full config through the model-graph frontend, generates the
+    fused interconnect of the design's wiring class (the paper's
+    LEGO-MNICOC for the default 256-FU ``switch`` point, or the ``--dse``
+    frontier pick's class), then maps the prefill pass and the decode step
+    onto the design point and compares each against the Gemmini baseline.
+    """
+    cfg = get_config(model_id)
+    graphs = {ph: build_model_graph(cfg, seq=seq, phase=ph)
+              for ph in ("prefill", "decode")}
+    g = graphs["prefill"]
+    print(f"== lowering {cfg.name}: {g.n_nodes} graph nodes -> "
+          f"{len(g.lowered())} unique workload shapes "
+          f"({g.macs() / 1e9:.1f} GMACs prefill @ seq {seq}) ==")
+    print(g.summary(limit=16))
+
+    # 256 FUs / 256 KB / switch (the paper's budget) unless --dse picked one
+    point = point or DesignPoint()
+    t0 = time.time()
+    design_name = SET_TO_DESIGN[point.dataflow_set]
+    print(f"== generating {design_name} interconnect "
+          f"(16x16 demo of the {point.dataflow_set!r} wiring class) ==")
+    adg = build_design(design_name)
+    dag = codegen(adg)
+    run_backend(dag)
+    print(f"  generation time: {time.time()-t0:.1f}s "
+          f"(paper: 28.7s at 256 FUs)")
+    if emit:
+        emit_rtl(dag, emit)
+
+    zoo = {f"{model_id}@{ph}": gr.lowered() for ph, gr in graphs.items()}
+    ev = Evaluator(zoo=zoo, cache=MappingCache(), baseline="gemmini")
+    e = ev.evaluate(point)
+    print(f"== mapping {cfg.name} on {point.name} ==")
+    print(f"  est. area {e.area_mm2:.2f} mm2, power {e.power_mw:.0f} mW "
+          f"(closed-form, as in BENCH_models.json)")
+    for key, rec in e.per_config.items():
+        ph = key.split("@")[-1]
+        print(f"  {ph:>8}: {rec['cycles']/1e6:10.2f} Mcycles, "
+              f"{rec['gops']:5.0f} GOP/s, util {rec['utilization']:.2f}, "
+              f"{rec['speedup_vs_gemmini']:.2f}x vs Gemmini "
+              f"({rec['energy_vs_gemmini']:.2f}x energy)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--net", default="MobileNetV2")
+    ap.add_argument("--model", default=None, metavar="ID",
+                    help="map a repro.configs foundation model (lowered via "
+                         "repro.frontend, prefill + decode) instead of a "
+                         "--net CNN table")
+    ap.add_argument("--seq", type=int, default=512,
+                    help="prefill length / decode context (with --model)")
     ap.add_argument("--dse", default=None, metavar="BENCH_dse.json",
                     help="take the accelerator config from a DSE sweep")
     ap.add_argument("--pick", default="cycles",
@@ -133,12 +195,38 @@ def main():
     ap.add_argument("--emit-rtl", default=None, metavar="OUT.v",
                     help="write the generated design as structural Verilog "
                          "(datapath + per-dataflow control + df_sel top)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="validate arguments and inputs, print the plan, "
+                         "exit before generation/mapping")
     args = ap.parse_args()
 
-    if args.dse:
-        if not os.path.exists(args.dse):
-            sys.exit(f"error: {args.dse} not found — run "
-                     f"`python benchmarks/dse.py --space small` first")
+    model_id = None
+    if args.model:
+        try:
+            (model_id,) = resolve_ids(args.model)
+        except (KeyError, ValueError) as e:
+            sys.exit(f"error: --model expects one repro.configs id: "
+                     f"{e.args[0]}")
+    elif args.net not in NETWORKS:
+        sys.exit(f"error: unknown net {args.net!r}; known: "
+                 f"{', '.join(sorted(NETWORKS))}")
+    if args.dse and not os.path.exists(args.dse):
+        sys.exit(f"error: {args.dse} not found — run "
+                 f"`python benchmarks/dse.py --space small` first")
+
+    if args.dry_run:
+        target = (f"model {model_id}" if model_id else f"net {args.net}")
+        source = (f"DSE pick (min {args.pick}) from {args.dse}" if args.dse
+                  else "LEGO-MNICOC (256 FUs)")
+        print(f"dry run: would map {target} on {source}"
+              + (f", emitting RTL to {args.emit_rtl}" if args.emit_rtl
+                 else ""))
+        return
+
+    if model_id:
+        point = pick_dse_design(args.dse, args.pick) if args.dse else None
+        run_model_design(model_id, args.seq, emit=args.emit_rtl, point=point)
+    elif args.dse:
         run_dse_design(pick_dse_design(args.dse, args.pick), args.net,
                        args.pick, emit=args.emit_rtl)
     else:

@@ -91,12 +91,41 @@ print(f"emit determinism OK ({len(a.splitlines())} lines, "
 PY
 
 echo
+echo "== docs-examples gate (fenced bash quickstarts, --dry-run) =="
+python scripts/docs_examples.py
+
+echo
 echo "== smoke DSE sweep (tiny space, reduced configs, 2 workers) =="
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 python benchmarks/dse.py --space tiny --configs gemma_7b,glm4_9b \
     --reduced --seq 64 --workers 2 -q \
     --out "$tmp/BENCH_dse.json" --cache-path "$tmp/cache.json"
+
+echo
+echo "== cross-model sweep budget: --models all --quick under 60s =="
+start=$SECONDS
+python benchmarks/dse.py --models all --quick -q \
+    --out "$tmp/BENCH_models.json" --cache-path "$tmp/models_cache.json"
+elapsed=$((SECONDS - start))
+python - "$tmp/BENCH_models.json" <<'PY'
+import json, sys
+p = json.load(open(sys.argv[1]))
+assert len(p["model_ids"]) == 10 and p["winner"]["design"]["name"], \
+    "models payload incomplete"
+missing = [m for m in p["model_ids"]
+           if not any(k == m or k.startswith(m + "@")
+                      for k in p["winner"]["per_model"])]
+assert not missing, f"missing per-model perf: {missing}"
+print(f"BENCH_models.json OK: {len(p['model_ids'])} models, "
+      f"winner {p['winner']['design']['name']} "
+      f"({p['winner']['metric']}={p['winner']['score']:.2f})")
+PY
+if [ "$elapsed" -ge 60 ]; then
+    echo "--models all --quick took ${elapsed}s (budget 60s)" >&2
+    exit 1
+fi
+echo "budget OK: ${elapsed}s"
 
 echo
 echo "check.sh: OK"

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Docs-examples gate: the quickstart commands in the docs must still run.
+
+Every fenced ```bash block in ``README.md`` and ``docs/*.md`` is scanned;
+each command line invoking one of the dry-runnable CLI entry points
+(``benchmarks/dse.py``, ``examples/generate_accelerator.py``) is executed
+with ``--dry-run`` appended — the CLIs validate arguments, resolve configs
+and lower the model zoo, then exit before any sweep/generation/emission, so
+the gate is fast and writes nothing.  A documented command whose flags or
+config ids have drifted from the code fails here, not on a reader's
+machine.
+
+Other fenced commands (``pip``, ``pytest``, ``scripts/check.sh``,
+``python -m benchmarks.run`` …) are counted as skipped: they are either the
+test/CI entry points themselves or have no dry-run contract.
+
+Run from the repo root: ``python scripts/docs_examples.py`` (exit 0 = clean).
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+DOC_FILES.append(os.path.join(ROOT, "README.md"))
+
+DRY_RUNNABLE = ("benchmarks/dse.py", "examples/generate_accelerator.py")
+
+FENCE_RE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+
+
+def bash_commands(text: str) -> list[str]:
+    """Fenced-bash command lines: continuations joined, comments dropped."""
+    out = []
+    for block in FENCE_RE.findall(text):
+        logical = block.replace("\\\n", " ")
+        for line in logical.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                out.append(line)
+    return out
+
+
+def dry_run_argv(cmd: str) -> list[str] | None:
+    """argv for a dry-runnable command, or None if the command is skipped."""
+    try:
+        toks = shlex.split(cmd)
+    except ValueError:
+        return None
+    toks = [t for t in toks if "=" not in t or not re.match(r"^[A-Z_]+=", t)]
+    for i, t in enumerate(toks):
+        if t in DRY_RUNNABLE:
+            argv = [sys.executable, os.path.join(ROOT, t)] + toks[i + 1:]
+            if "--dry-run" not in argv:
+                argv.append("--dry-run")
+            return argv
+    return None
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    problems: list[str] = []
+    n_run = n_skip = 0
+    for path in DOC_FILES:
+        rel = os.path.relpath(path, ROOT)
+        with open(path) as f:
+            cmds = bash_commands(f.read())
+        for cmd in cmds:
+            argv = dry_run_argv(cmd)
+            if argv is None:
+                n_skip += 1
+                continue
+            n_run += 1
+            try:
+                out = subprocess.run(argv, capture_output=True, text=True,
+                                     timeout=180, env=env, cwd=ROOT)
+            except subprocess.TimeoutExpired:
+                problems.append(f"{rel}: timed out: {cmd}")
+                continue
+            if out.returncode != 0:
+                tail = (out.stderr.strip() or out.stdout.strip())[-300:]
+                problems.append(f"{rel}: exited {out.returncode}: {cmd}\n"
+                                f"    {tail}")
+    if problems:
+        for p in problems:
+            print(f"docs-examples: {p}", file=sys.stderr)
+        print(f"docs-examples: {len(problems)} problem(s)", file=sys.stderr)
+        return 1
+    print(f"docs-examples OK: {n_run} quickstart commands dry-ran clean "
+          f"({n_skip} non-dry-runnable skipped)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,7 +8,11 @@ Checked over ``docs/*.md`` and ``README.md``:
    to a file or directory (anchors and line suffixes stripped);
 2. every CLI command line referencing one of the documented entry points
    parses — the script is invoked with ``--help`` once, and every
-   ``--flag`` the docs mention for it must appear in that help text.
+   ``--flag`` the docs mention for it must appear in that help text;
+3. every backticked dotted Python reference (``repro.mod.symbol`` /
+   ``benchmarks.mod.symbol``) resolves via import: the longest importable
+   module prefix is imported and the remaining components are looked up
+   with ``getattr`` — a doc naming a renamed/deleted symbol fails the gate.
 
 Run from the repo root: ``python scripts/docs_gate.py`` (exit 0 = clean).
 """
@@ -16,12 +20,16 @@ Run from the repo root: ``python scripts/docs_gate.py`` (exit 0 = clean).
 from __future__ import annotations
 
 import glob
+import importlib
 import os
 import re
 import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (ROOT, os.path.join(ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 DOC_FILES = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
 DOC_FILES.append(os.path.join(ROOT, "README.md"))
@@ -37,6 +45,31 @@ FLAG_RE = re.compile(r"(--[a-z][a-z0-9-]*)")
 # flags that look like CLI flags in prose but belong to other tools
 FLAG_ALLOW = {"--help"}
 
+# backticked dotted Python references: `repro.core.emit.build_netlist`
+SYMBOL_RE = re.compile(r"`((?:repro|benchmarks)(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+
+
+def resolve_symbol(ref: str) -> str | None:
+    """Import-resolve a dotted doc reference; returns an error string or
+    None.  Tries the longest module prefix, then getattr's the rest."""
+    parts = ref.split(".")
+    err = None
+    for i in range(len(parts), 0, -1):
+        mod_name = ".".join(parts[:i])
+        try:
+            obj = importlib.import_module(mod_name)
+        except ImportError as e:
+            err = str(e)
+            continue
+        for attr in parts[i:]:
+            try:
+                obj = getattr(obj, attr)
+            except AttributeError:
+                return (f"{mod_name} has no attribute "
+                        f"{'.'.join(parts[i:])!r}")
+        return None
+    return f"cannot import any prefix of {ref!r} ({err})"
+
 
 def fail(msgs: list[str]) -> int:
     for m in msgs:
@@ -48,11 +81,15 @@ def fail(msgs: list[str]) -> int:
 def main() -> int:
     problems: list[str] = []
     flags_per_script: dict[str, set[str]] = {s: set() for s in CLI_SCRIPTS}
+    symbol_refs: dict[str, set[str]] = {}  # ref -> docs mentioning it
 
     for path in DOC_FILES:
         rel = os.path.relpath(path, ROOT)
         with open(path) as f:
             text = f.read()
+
+        for m in SYMBOL_RE.finditer(text):
+            symbol_refs.setdefault(m.group(1), set()).add(rel)
 
         for m in PATH_RE.finditer(text):
             p = m.group(1).rstrip(".")
@@ -69,6 +106,12 @@ def main() -> int:
                     flags_per_script[script].update(
                         f for f in FLAG_RE.findall(line)
                         if f not in FLAG_ALLOW)
+
+    for ref in sorted(symbol_refs):
+        err = resolve_symbol(ref)
+        if err:
+            docs = ", ".join(sorted(symbol_refs[ref]))
+            problems.append(f"{docs}: unresolvable symbol `{ref}`: {err}")
 
     for script, flags in flags_per_script.items():
         cmd = [sys.executable, os.path.join(ROOT, script), "--help"]
@@ -96,6 +139,7 @@ def main() -> int:
         return fail(problems)
     n_paths = sum(len(PATH_RE.findall(open(p).read())) for p in DOC_FILES)
     print(f"docs-gate OK: {len(DOC_FILES)} docs, {n_paths} path refs, "
+          f"{len(symbol_refs)} python symbols, "
           f"{sum(map(len, flags_per_script.values()))} CLI flags verified")
     return 0
 

@@ -38,7 +38,7 @@ from .workload import Workload
 __all__ = ["PhysicalLink", "FusedTensorPlan", "DataflowSolution",
            "solve_dataflow", "fuse_tensor", "naive_merge",
            "data_node_pressure", "estimate_data_nodes",
-           "DesignScore", "score_fused_design"]
+           "DesignScore", "score_fused_design", "score_design_over_zoo"]
 
 
 @dataclass
@@ -437,6 +437,49 @@ def score_fused_design(
         score.add(rep, perf.cycles, perf.energy_pj, perf.macs,
                   perf.ppu_cycles)
     return score
+
+
+def score_design_over_zoo(
+    zoo,
+    spatials_for,
+    hw,
+    *,
+    objective: str = "cycles",
+    data_nodes_per_tensor: dict[str, int] | None = None,
+    mapping_fn=None,
+    batch_mapping_fn=None,
+) -> dict[str, DesignScore]:
+    """Score **one** candidate design across a whole model zoo.
+
+    ``zoo``: ``{model_name: [(workload, dims, repeat, ppu_elements), ...]}``
+    — typically the output of :func:`repro.frontend.lower.lower_zoo` with
+    each row's kind resolved to its :class:`~repro.core.workload.Workload`.
+    ``spatials_for``: the design's runtime-switchable dataflow menu — either
+    a ``dict[workload_name, list[SpatialChoice]]`` shared by every model or a
+    callable ``workload_name -> list[SpatialChoice]`` (e.g.
+    ``DesignPoint.spatials``).
+
+    Returns one :class:`DesignScore` per model.  This is the paper's
+    "one generated architecture for diverse modern foundation models"
+    objective: a single ``hw``/dataflow-set candidate is held fixed while
+    every model's layers are mapped onto it; the caller aggregates the
+    per-model scores into a cross-model selection metric (geomean speedup in
+    :mod:`repro.dse.report`).  Shared layer shapes across models dedup
+    through ``batch_mapping_fn`` (the DSE mapping-cache front door).
+    """
+    out: dict[str, DesignScore] = {}
+    for model, layers in zoo.items():
+        layers = list(layers)
+        if callable(spatials_for):
+            spatials = {wl.name: spatials_for(wl.name)
+                        for wl, _, _, _ in layers}
+        else:
+            spatials = spatials_for
+        out[model] = score_fused_design(
+            layers, spatials, hw, objective=objective,
+            data_nodes_per_tensor=data_nodes_per_tensor,
+            mapping_fn=mapping_fn, batch_mapping_fn=batch_mapping_fn)
+    return out
 
 
 def naive_merge(solutions: list[DataflowSolution]) -> FusedTensorPlan:

@@ -9,8 +9,10 @@ architecture for diverse modern foundation models").
 """
 
 from .cache import MappingCache
-from .evaluate import DesignEval, Evaluator, load_zoo, lower_config
-from .report import format_frontier, format_scorecard, write_bench_json
+from .evaluate import (DesignEval, Evaluator, gemmini_zoo_baseline, load_zoo,
+                       lower_config)
+from .report import (cross_model_winner, format_frontier, format_models,
+                     format_scorecard, write_bench_json, write_models_json)
 from .search import (SearchResult, dominates, evolutionary_search,
                      exhaustive_search, pareto_frontier, run_search)
 from .space import DATAFLOW_SETS, SPACES, DesignPoint, DesignSpace
@@ -19,7 +21,9 @@ __all__ = [
     "DesignPoint", "DesignSpace", "SPACES", "DATAFLOW_SETS",
     "MappingCache",
     "Evaluator", "DesignEval", "load_zoo", "lower_config",
+    "gemmini_zoo_baseline",
     "pareto_frontier", "dominates", "exhaustive_search",
     "evolutionary_search", "run_search", "SearchResult",
     "format_frontier", "format_scorecard", "write_bench_json",
+    "cross_model_winner", "format_models", "write_models_json",
 ]

@@ -1,37 +1,42 @@
 """Multi-workload design evaluator.
 
 Lowers every :class:`~repro.models.common.ModelConfig` in the zoo to its
-layer :class:`~repro.core.workload.Workload`s **once**, then scores each
-candidate design by running the mapping search through the persistent
-:class:`~repro.dse.cache.MappingCache` — all cache-missing layer shapes of a
-config are solved per workload kind in **one batched query** against the
-vectorized engine (:mod:`repro.core.mapper_batch`) — and aggregating
-cycles/energy per layer row plus area/power via the closed-form estimators
-in :mod:`repro.core.cost`.
+layer workloads **once** through the model-graph frontend
+(:mod:`repro.frontend` — attention incl. GQA/MQA, MoE experts, SSM scan,
+RWKV token-shift, enc-dec cross-attention, conv stems, prefill/decode
+phases), then scores each candidate design with
+:func:`repro.core.fusion.score_design_over_zoo`: all cache-missing layer
+shapes of a workload kind are solved in **one batched query** against the
+vectorized engine (:mod:`repro.core.mapper_batch`) through the persistent
+:class:`~repro.dse.cache.MappingCache`, and cycles/energy aggregate per
+layer row plus area/power via the closed-form estimators in
+:mod:`repro.core.cost`.
 
-The lowering mirrors ``benchmarks/nn_workloads.py``: every block becomes a
-list of ``(kind, dims, repeat, nontensor_elements)`` rows with
-``kind ∈ {gemm, conv, dwconv}`` — attention score/context GEMMs are expressed
-in plain ``(i, j, k)`` form, softmax/norm/scan elementwise work runs on the
-PPUs.  Identical rows are merged so the mapper never sees the same shape
-twice within a config.
+With ``baseline="gemmini"`` the evaluator also scores every zoo entry on
+the Gemmini model (:func:`repro.core.baselines.gemmini_layer_perf`) —
+baselines depend only on the zoo, so they are computed once per evaluator —
+and each design's per-model scorecard gains ``speedup_vs_gemmini`` /
+``energy_vs_gemmini``, the paper's Fig. 11/12 comparison axes that the
+cross-model winner in :mod:`repro.dse.report` maximizes.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.configs import get_config
 from repro.core import workload as W
+from repro.core.baselines import gemmini_layer_perf
 from repro.core.cost import estimate_design_area_mm2, estimate_design_power_mw
-from repro.core.fusion import DesignScore, score_fused_design
+from repro.core.fusion import DesignScore, score_design_over_zoo
+from repro.frontend import lower_model
+from repro.frontend import lower_zoo as _frontend_lower_zoo
 from repro.models.common import ModelConfig
 
 from .cache import MappingCache
 from .space import DesignPoint
 
 __all__ = ["lower_config", "load_zoo", "Evaluator", "DesignEval",
-           "DEFAULT_ZOO"]
+           "DEFAULT_ZOO", "gemmini_zoo_baseline"]
 
 # four families: dense GLU, MoE, hybrid Mamba+attn+MoE, RWKV
 DEFAULT_ZOO = ("gemma_7b", "glm4_9b", "deepseek_moe_16b", "rwkv6_7b")
@@ -39,116 +44,46 @@ DEFAULT_ZOO = ("gemma_7b", "glm4_9b", "deepseek_moe_16b", "rwkv6_7b")
 _WL = {"gemm": W.gemm(), "conv": W.conv2d(), "dwconv": W.depthwise_conv2d()}
 
 
-def _gemm(i, j, k, rep=1, nt=0):
-    return ("gemm", dict(i=int(i), j=int(j), k=int(k)), int(rep), float(nt))
-
-
-def _attn_rows(cfg: ModelConfig, seq: int, batch: int, kv_len: int) -> list:
-    """Self- (kv_len == seq) or cross- (kv_len = encoder length) attention."""
-    d, hd = cfg.d_model, cfg.hd
-    toks = seq * batch
-    q_cols = cfg.n_heads * hd
-    kv_cols = 2 * cfg.n_kv_heads * hd
-    return [
-        _gemm(toks, q_cols + kv_cols, d),                      # QKV proj
-        _gemm(seq, kv_len, hd, rep=cfg.n_heads * batch,
-              nt=seq * kv_len),                                # scores
-        _gemm(seq, hd, kv_len, rep=cfg.n_heads * batch),       # context
-        _gemm(toks, d, q_cols, nt=toks * d),                   # out proj
-    ]
-
-
-def _block_rows(cfg: ModelConfig, spec, seq: int, batch: int) -> list:
-    d = cfg.d_model
-    toks = seq * batch
-    rows = []
-    if spec.kind == "attn":
-        hd = cfg.hd
-        eff = min(seq, spec.window) if spec.window else seq
-        rows += [
-            _gemm(toks, (cfg.n_heads + 2 * cfg.n_kv_heads) * hd, d),
-            _gemm(seq, eff, hd, rep=cfg.n_heads * batch, nt=seq * eff),
-            _gemm(seq, hd, eff, rep=cfg.n_heads * batch),
-            _gemm(toks, d, cfg.n_heads * hd, nt=toks * d),
-        ]
-    elif spec.kind == "mamba":
-        di, dtr, ds = cfg.d_inner, cfg.dtr, cfg.d_state
-        rows += [
-            _gemm(toks, 2 * di, d),                  # in_proj (x and gate)
-            _gemm(toks, dtr + 2 * ds, di),           # x_proj (Δ, B, C)
-            _gemm(toks, di, dtr),                    # dt_proj
-            _gemm(toks, d, di,
-                  nt=toks * di * (cfg.d_conv + ds)),  # out_proj + conv/scan
-        ]
-    elif spec.kind == "rwkv":
-        rows += [
-            _gemm(toks, d, d, rep=6, nt=toks * d * 2),   # r/k/v/w/g + out, wkv
-            _gemm(toks, cfg.d_ff, d),                    # channel-mix up
-            _gemm(toks, d, cfg.d_ff),                    # channel-mix down
-        ]
-    # FFN (attention and mamba-free blocks carry it; rwkv has channel mix)
-    if spec.kind == "attn":
-        n_up = 2 if cfg.glu else 1
-        if spec.moe and cfg.n_experts:
-            ff = cfg.d_ff_e
-            active = cfg.top_k + cfg.n_shared_experts
-            rows.append(_gemm(toks, cfg.n_experts, d,
-                              nt=toks * cfg.n_experts))      # router
-            rows.append(_gemm(toks, ff, d, rep=n_up * active))
-            rows.append(_gemm(toks, d, ff, rep=active, nt=toks * d))
-        else:
-            rows.append(_gemm(toks, cfg.d_ff, d, rep=n_up))
-            rows.append(_gemm(toks, d, cfg.d_ff, nt=toks * d))
-    elif spec.kind == "mamba" and spec.moe and cfg.n_experts:
-        ff = cfg.d_ff_e
-        active = cfg.top_k + cfg.n_shared_experts
-        n_up = 2 if cfg.glu else 1
-        rows.append(_gemm(toks, cfg.n_experts, d, nt=toks * cfg.n_experts))
-        rows.append(_gemm(toks, ff, d, rep=n_up * active))
-        rows.append(_gemm(toks, d, ff, rep=active, nt=toks * d))
-    return rows
-
-
-def lower_config(cfg: ModelConfig, seq: int = 512, batch: int = 1) -> list:
+def lower_config(cfg: ModelConfig, seq: int = 512, batch: int = 1,
+                 phase: str = "prefill") -> list:
     """ModelConfig → merged ``(kind, dims, repeat, nontensor)`` layer rows.
 
-    Scores a *prefill* pass of ``batch`` sequences of ``seq`` tokens — the
-    throughput-bound regime spatial accelerators target.
+    Thin wrapper over :func:`repro.frontend.lower_model` (kept as the
+    historical DSE entry point).  ``phase="prefill"`` scores a prefill pass
+    of ``batch`` sequences of ``seq`` tokens — the throughput-bound regime
+    spatial accelerators target; ``phase="decode"`` scores one generated
+    token against a ``seq``-token context.
     """
-    rows = []
-    for spec in cfg.layer_pattern:
-        for r in _block_rows(cfg, spec, seq, batch):
-            rows.append((r[0], r[1], r[2] * cfg.n_periods, r[3]))
-    # encoder stack + per-decoder-layer cross-attention for enc-dec models
-    if cfg.is_encoder_decoder and cfg.n_enc_layers and cfg.enc_seq_len:
-        enc_spec = cfg.layer_pattern[0]
-        for k, dd, rep, nt in _block_rows(cfg, enc_spec, cfg.enc_seq_len,
-                                          batch):
-            rows.append((k, dd, rep * cfg.n_enc_layers, nt))
-        rows += [(k, dd, rep * cfg.n_layers, nt) for (k, dd, rep, nt)
-                 in _attn_rows(cfg, seq, batch, cfg.enc_seq_len)]
-    # LM head over the whole prefill
-    rows.append(_gemm(seq * batch, cfg.vocab_size, cfg.d_model))
-
-    # merge identical rows
-    merged: dict[tuple, list] = {}
-    for kind, dims, rep, nt in rows:
-        key = (kind, tuple(sorted(dims.items())), nt)
-        if key in merged:
-            merged[key][2] += rep
-        else:
-            merged[key] = [kind, dims, rep, nt]
-    return [tuple(v) for v in merged.values()]
+    return lower_model(cfg, seq=seq, batch=batch, phase=phase)
 
 
 def load_zoo(config_names=DEFAULT_ZOO, seq: int = 512, batch: int = 1,
-             reduced: bool = False) -> dict[str, list]:
-    """Lower every named config once: {config: [(kind, dims, rep, nt)]}."""
-    zoo = {}
-    for name in config_names:
-        cfg = get_config(name, reduced=reduced)
-        zoo[name] = lower_config(cfg, seq=seq, batch=batch)
-    return zoo
+             reduced: bool = False,
+             phases=("prefill",)) -> dict[str, list]:
+    """Lower every named config once per phase: {key: [(kind, dims, rep,
+    nt)]} — keys are config ids, suffixed ``@phase`` when several phases are
+    requested (see :func:`repro.frontend.lower_zoo`)."""
+    return _frontend_lower_zoo(config_names, seq=seq, batch=batch,
+                               phases=phases, reduced=reduced)
+
+
+def gemmini_zoo_baseline(zoo: dict[str, list]) -> dict[str, dict]:
+    """Score every zoo entry on the Gemmini baseline (§VI-A comparison).
+
+    Depends only on the lowered rows — one pass per zoo, reused across all
+    candidate designs of a sweep.
+    """
+    out: dict[str, dict] = {}
+    for name, rows in zoo.items():
+        cyc = en = macs = 0.0
+        for kind, dims, rep, nt in rows:
+            p = gemmini_layer_perf(kind, dims, ppu_elements=nt)
+            cyc += rep * p.cycles
+            en += rep * p.energy_pj
+            macs += rep * p.macs
+        out[name] = {"cycles": cyc, "energy_pj": en, "macs": macs,
+                     "gops": 2.0 * macs / max(1.0, cyc)}
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -192,30 +127,53 @@ class Evaluator:
 
     def __init__(self, zoo: dict[str, list] | None = None,
                  cache: MappingCache | None = None,
-                 objective: str = "cycles"):
+                 objective: str = "cycles",
+                 baseline: str | None = None):
         self.zoo = zoo if zoo is not None else load_zoo()
         self.cache = cache if cache is not None else MappingCache()
         self.objective = objective
+        if baseline not in (None, "gemmini"):
+            raise ValueError(f"unknown baseline {baseline!r}")
+        self.baseline = baseline
+        self._baselines: dict[str, dict] | None = None
+
+    @property
+    def baselines(self) -> dict[str, dict]:
+        """Per-zoo-entry baseline scores (empty when no baseline is set);
+        computed lazily once — they only depend on the zoo."""
+        if self.baseline is None:
+            return {}
+        if self._baselines is None:
+            self._baselines = gemmini_zoo_baseline(self.zoo)
+        return self._baselines
 
     def evaluate(self, point: DesignPoint) -> DesignEval:
         hw = point.hw_config()
+        zoo_layers = {
+            name: [(_WL[kind], dims, rep, nt) for kind, dims, rep, nt in rows]
+            for name, rows in self.zoo.items()}
+        # all cache-missing layer shapes of a workload kind solve in a
+        # single batched query through the persistent mapping cache
+        scores = score_design_over_zoo(
+            zoo_layers, point.spatials, hw, objective=self.objective,
+            batch_mapping_fn=self.cache.best_mapping_perfs)
+
+        base = self.baselines
         total = DesignScore()
         per_config = {}
-        for cfg_name, rows in self.zoo.items():
-            layers = [(_WL[kind], dims, rep, nt)
-                      for kind, dims, rep, nt in rows]
-            spatials = {wl.name: point.spatials(wl.name)
-                        for wl, _, _, _ in layers}
-            # all cache-missing layer shapes of a workload kind solve in a
-            # single batched query through the persistent mapping cache
-            s = score_fused_design(layers, spatials, hw,
-                                   objective=self.objective,
-                                   batch_mapping_fn=self.cache.best_mapping_perfs)
-            per_config[cfg_name] = {
+        for cfg_name, s in scores.items():
+            rec = {
                 "cycles": s.cycles, "energy_pj": s.energy_pj,
                 "macs": s.macs, "gops": s.gops,
                 "gops_per_w": s.gops_per_w,
+                "utilization": s.macs / (point.n_fus * max(1.0, s.cycles)),
             }
+            b = base.get(cfg_name)
+            if b is not None:
+                rec["speedup_vs_gemmini"] = b["cycles"] / max(1.0, s.cycles)
+                rec["energy_vs_gemmini"] = (b["energy_pj"]
+                                            / max(1.0, s.energy_pj))
+            per_config[cfg_name] = rec
             total.add(1.0, s.cycles, s.energy_pj, s.macs, s.ppu_cycles)
 
         area = estimate_design_area_mm2(

@@ -1,12 +1,17 @@
-"""Frontier reporting: terminal tables + ``BENCH_dse.json``."""
+"""Frontier reporting: terminal tables + ``BENCH_dse.json`` /
+``BENCH_models.json`` (the cross-model study with its "one-architecture"
+winner)."""
 
 from __future__ import annotations
+
+import math
 
 from .cache import atomic_write_json
 from .evaluate import DesignEval
 from .search import SearchResult
 
-__all__ = ["format_scorecard", "format_frontier", "write_bench_json"]
+__all__ = ["format_scorecard", "format_frontier", "write_bench_json",
+           "cross_model_winner", "format_models", "write_models_json"]
 
 
 def _row(e: DesignEval) -> str:
@@ -40,6 +45,108 @@ def format_frontier(result: SearchResult) -> str:
     for obj in ("cycles", "energy", "area", "edp"):
         lines.append(f"best[{obj:>6}]: {result.best(obj).point.name}")
     return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# cross-model study ("one generated architecture for diverse models")
+# ---------------------------------------------------------------------------
+
+def _geomean(vals) -> float:
+    vals = [max(v, 1e-12) for v in vals]
+    return math.exp(sum(math.log(v) for v in vals) / len(vals)) if vals else 0.0
+
+
+def cross_model_winner(evals: list[DesignEval]
+                       ) -> tuple[DesignEval, float, str]:
+    """The single design that serves the whole zoo best.
+
+    Primary metric: geometric-mean ``speedup_vs_gemmini`` across every model
+    in each design's scorecard (present when the evaluator ran with
+    ``baseline="gemmini"``) — maximized, so no one model's scale dominates
+    the decision.  Without a baseline it falls back to minimizing the
+    geomean of per-model cycles normalized to the best design seen for that
+    model.  Returns ``(winner, geomean_score, metric_name)``.
+    """
+    if not evals:
+        raise ValueError("cross_model_winner needs at least one DesignEval")
+    has_speedup = all("speedup_vs_gemmini" in rec
+                      for rec in evals[0].per_config.values())
+    if has_speedup:
+        def score(e):
+            return _geomean([rec["speedup_vs_gemmini"]
+                             for rec in e.per_config.values()])
+        win = max(evals, key=score)
+        return win, score(win), "geomean_speedup_vs_gemmini"
+    best = {m: min(e.per_config[m]["cycles"] for e in evals)
+            for m in evals[0].per_config}
+    def norm(e):
+        return _geomean([e.per_config[m]["cycles"] / max(best[m], 1.0)
+                         for m in best])
+    win = min(evals, key=norm)
+    return win, norm(win), "geomean_normalized_cycles"
+
+
+def format_models(result: SearchResult) -> str:
+    """Winner announcement + its per-model scorecard table."""
+    win, g, metric = cross_model_winner(result.frontier or result.evals)
+    hdr = (f"{'model':<36} {'Mcycles':>10} {'util':>6} {'GOP/s':>8} "
+           f"{'vs Gemmini':>11}")
+    lines = [
+        f"== cross-model winner ({metric} = {g:.2f}): {win.point.name} ==",
+        hdr, "-" * len(hdr),
+    ]
+    for m, rec in win.per_config.items():
+        sp = rec.get("speedup_vs_gemmini")
+        sp_s = f"{sp:>10.2f}x" if sp is not None else f"{'—':>11}"
+        lines.append(f"{m:<36} {rec['cycles'] / 1e6:>10.1f} "
+                     f"{rec['utilization']:>6.2f} {rec['gops']:>8.0f} "
+                     f"{sp_s}")
+    return "\n".join(lines)
+
+
+def write_models_json(path: str, result: SearchResult,
+                      model_ids: list[str],
+                      baselines: dict[str, dict] | None = None,
+                      meta: dict | None = None,
+                      artifacts: dict | None = None) -> dict:
+    """Dump the cross-model study to ``BENCH_models.json`` (atomic write).
+
+    The payload carries per-model perf for every zoo entry of every design,
+    the Pareto frontier, and the single cross-model ``winner`` design with
+    its geomean selection score (:func:`cross_model_winner`) — picked among
+    the non-dominated designs so the "one architecture" answer respects the
+    cycles/energy/area trade-off, not raw speed alone.  ``artifacts`` maps a
+    dataflow set to an emitted Verilog path (``--emit-dir``), attached to
+    each design entry as ``rtl`` exactly as in :func:`write_bench_json`."""
+    def entry(e: DesignEval) -> dict:
+        d = e.as_dict()
+        if artifacts:
+            rtl = artifacts.get(e.point.dataflow_set)
+            if rtl:
+                d["rtl"] = rtl
+        return d
+
+    win, g, metric = cross_model_winner(result.frontier or result.evals)
+    payload = {
+        "bench": "models",
+        "space": result.space,
+        "strategy": result.strategy,
+        "n_designs": result.n_designs,
+        "wall_s": result.wall_s,
+        "cache": result.cache_stats,
+        "meta": meta or {},
+        "model_ids": model_ids,
+        "baseline": baselines or {},
+        "artifacts": artifacts or {},
+        "winner": {"design": win.point.as_dict(), "metric": metric,
+                   "score": g, "per_model": win.per_config},
+        "frontier": [entry(e) for e in result.frontier],
+        "designs": [entry(e) for e in result.evals],
+        "best": {obj: result.best(obj).point.name
+                 for obj in ("cycles", "energy", "area", "edp")},
+    }
+    atomic_write_json(path, payload, indent=1)
+    return payload
 
 
 def write_bench_json(path: str, result: SearchResult,

@@ -92,13 +92,13 @@ class SearchResult:
 _WORKER: dict = {}
 
 
-def _init_worker(zoo, objective, warm_entries):
+def _init_worker(zoo, objective, warm_entries, baseline=None):
     """Build this worker's Evaluator around a private in-memory mapping
     cache, warm-started with the parent's entries."""
     cache = MappingCache()
     cache.merge(warm_entries)  # merge bypasses the put() journal, so the
     _WORKER["ev"] = Evaluator(  # warm entries never echo back to the parent
-        zoo=zoo, cache=cache, objective=objective)
+        zoo=zoo, cache=cache, objective=objective, baseline=baseline)
 
 
 def _worker_eval(point: DesignPoint):
@@ -127,7 +127,8 @@ class _PointEvaluator:
                 max_workers=self.workers, mp_context=ctx,
                 initializer=_init_worker,
                 initargs=(evaluator.zoo, evaluator.objective,
-                          evaluator.cache.snapshot()))
+                          evaluator.cache.snapshot(),
+                          getattr(evaluator, "baseline", None)))
 
     def map(self, points: list[DesignPoint], log=None) -> list[DesignEval]:
         if self._pool is None:

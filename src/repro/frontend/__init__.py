@@ -1,0 +1,20 @@
+"""Model-zoo frontend: ``repro.configs`` specs → operator graphs → LEGO
+tensor workloads.
+
+``model_graph`` — :func:`build_model_graph` walks a
+:class:`~repro.models.common.ModelConfig` (attention incl. GQA/MQA, MoE
+experts, SSM scan, RWKV token-shift, enc-dec cross-attention, conv stems)
+into an :class:`OpNode` graph per execution phase (prefill / decode).
+
+``lower`` — :func:`lower_model` / :func:`lower_zoo` turn graphs into the
+deduplicated ``(kind, dims, repeat, nontensor)`` rows that
+:func:`repro.core.fusion.score_fused_design` and the DSE evaluator consume.
+"""
+
+from .lower import Row, lower_model, lower_zoo, merge_rows, zoo_key
+from .model_graph import PHASES, ModelGraph, OpNode, build_model_graph
+
+__all__ = [
+    "OpNode", "ModelGraph", "build_model_graph", "PHASES",
+    "Row", "merge_rows", "lower_model", "lower_zoo", "zoo_key",
+]

@@ -1,0 +1,90 @@
+"""Model-graph → LEGO workload lowering (the config→workload contract).
+
+One lowering *row* is ``(kind, dims, repeat, nontensor)``:
+
+``kind``
+    ``"gemm"`` | ``"conv"`` | ``"dwconv"`` — the LEGO workload the row maps
+    onto (:func:`repro.core.workload.gemm` / :func:`~repro.core.workload.conv2d`
+    / :func:`~repro.core.workload.depthwise_conv2d`);
+``dims``
+    that workload's iteration-dim sizes by name (``i/j/k`` for GEMM,
+    ``n/oc/ic/oh/ow/kh/kw`` for conv, ``n/c/oh/ow/kh/kw`` for dwconv);
+``repeat``
+    how many times the shape executes end-to-end (layers × heads × experts ×
+    batch folded in by the graph builder);
+``nontensor``
+    PPU element count per execution (softmax/norm/scan/token-shift) — LEGO
+    runs these on-chip, the Gemmini baseline pays a DRAM round trip.
+
+:func:`merge_rows` deduplicates identical ``(kind, dims, nontensor)`` shapes
+by summing repeats, so the mapper never sees the same shape twice within one
+model — MAC totals are preserved exactly.  The full contract (with a worked
+Llama-4 example) is documented in ``docs/MODELS.md``.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.common import ModelConfig
+
+from .model_graph import PHASES, ModelGraph, build_model_graph
+
+__all__ = ["Row", "merge_rows", "lower_model", "lower_zoo", "zoo_key"]
+
+# (kind, dims, repeat, nontensor) — the evaluator/scoring row format
+Row = tuple[str, dict[str, int], int, float]
+
+
+def merge_rows(rows: Iterable[Row]) -> list[Row]:
+    """Deduplicate rows with identical (kind, dims, nontensor) by summing
+    repeats; first-appearance order is kept so lowering is deterministic."""
+    merged: dict[tuple, list] = {}
+    for kind, dims, rep, nt in rows:
+        key = (kind, tuple(sorted(dims.items())), nt)
+        if key in merged:
+            merged[key][2] += rep
+        else:
+            merged[key] = [kind, dict(dims), rep, nt]
+    return [tuple(v) for v in merged.values()]  # type: ignore[misc]
+
+
+def lower_model(cfg: ModelConfig | str, *, seq: int = 512, batch: int = 1,
+                phase: str = "prefill", reduced: bool = False,
+                lm_head: bool = True) -> list[Row]:
+    """Lower one model (config object or ``repro.configs`` id) to merged
+    workload rows for one execution phase."""
+    if isinstance(cfg, str):
+        cfg = get_config(cfg, reduced=reduced)
+    graph = build_model_graph(cfg, seq=seq, batch=batch, phase=phase,
+                              lm_head=lm_head)
+    return graph.lowered()
+
+
+def zoo_key(name: str, phase: str, phases: Iterable[str]) -> str:
+    """Zoo dict key for one (model, phase) variant: the bare model id when a
+    single phase is swept, ``id@phase`` otherwise."""
+    return name if len(tuple(phases)) == 1 else f"{name}@{phase}"
+
+
+def lower_zoo(names: Iterable[str] | None = None, *, seq: int = 512,
+              batch: int = 1, phases: Iterable[str] = ("prefill",),
+              reduced: bool = False,
+              lm_head: bool = True) -> dict[str, list[Row]]:
+    """Lower every named config once per phase: ``{key: rows}``.
+
+    ``names=None`` lowers the whole assigned zoo (``repro.configs.ARCH_IDS``).
+    """
+    names = list(ARCH_IDS if names is None else names)
+    phases = tuple(phases)
+    for p in phases:
+        if p not in PHASES:
+            raise ValueError(f"unknown phase {p!r}; known: {PHASES}")
+    zoo: dict[str, list[Row]] = {}
+    for name in names:
+        cfg = get_config(name, reduced=reduced)
+        for phase in phases:
+            zoo[zoo_key(name, phase, phases)] = lower_model(
+                cfg, seq=seq, batch=batch, phase=phase, lm_head=lm_head)
+    return zoo

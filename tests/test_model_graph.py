@@ -1,0 +1,235 @@
+"""Model-graph frontend tests: shape correctness of the lowering for all
+ten assigned configs (both phases), golden dedup counts, and parity with the
+hand-maintained layer tables the frontend replaced in
+``benchmarks/nn_workloads.py``."""
+
+import math
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, resolve_ids
+from repro.core import workload as W
+from repro.frontend import (PHASES, build_model_graph, lower_model,
+                            lower_zoo, merge_rows)
+from repro.models.common import BlockSpec, ModelConfig
+
+_WL = {"gemm": W.gemm(), "conv": W.conv2d(), "dwconv": W.depthwise_conv2d()}
+
+
+def _row_macs(rows):
+    return sum(rep * math.prod(dims.values()) for _, dims, rep, _ in rows)
+
+
+def _shapes(rows):
+    """Comparable set of (kind, sorted dims) over a row list."""
+    return {(kind, tuple(sorted(dims.items()))) for kind, dims, _, _ in rows}
+
+
+class TestShapeCorrectness:
+    """Every lowered row must be a well-formed query for its workload."""
+
+    @pytest.mark.parametrize("phase", PHASES)
+    @pytest.mark.parametrize("name", ARCH_IDS)
+    def test_rows_well_formed(self, name, phase):
+        rows = lower_model(get_config(name), seq=128, phase=phase)
+        assert rows, (name, phase)
+        for kind, dims, rep, nt in rows:
+            wl = _WL[kind]
+            # dims must name the workload's iteration dims exactly
+            assert set(dims) == set(wl.iter_dims), (name, kind, dims)
+            assert all(isinstance(v, int) and v >= 1
+                       for v in dims.values()), (name, dims)
+            assert isinstance(rep, int) and rep >= 1
+            assert nt >= 0.0
+
+    @pytest.mark.parametrize("name", ARCH_IDS)
+    def test_dedup_preserves_macs(self, name):
+        g = build_model_graph(get_config(name), seq=96)
+        assert _row_macs(g.lowered()) == g.macs()
+
+    def test_merge_rows_sums_repeats(self):
+        rows = [("gemm", dict(i=4, j=8, k=2), 3, 1.0),
+                ("gemm", dict(i=4, j=8, k=2), 5, 1.0),
+                ("gemm", dict(i=4, j=8, k=2), 1, 2.0)]  # nt differs: kept
+        merged = merge_rows(rows)
+        assert len(merged) == 2
+        assert merged[0][2] == 8
+
+    def test_bad_inputs_rejected(self):
+        cfg = get_config("gemma_7b", reduced=True)
+        with pytest.raises(ValueError):
+            build_model_graph(cfg, phase="train")
+        with pytest.raises(ValueError):
+            build_model_graph(cfg, seq=0)
+        with pytest.raises(ValueError):
+            build_model_graph(cfg, batch=0)
+
+
+class TestGoldenDedup:
+    """Node/row counts are part of the lowering contract: a refactor that
+    silently splits or drops operators shows up here first (full() configs,
+    seq 512 — regenerate by printing n_nodes/len(lowered()))."""
+
+    GOLDEN = {
+        #                        prefill      decode
+        "jamba_1_5_large_398b": ((60, 13), (60, 13)),
+        "rwkv6_7b":             ((7, 7),   (7, 7)),
+        "mistral_nemo_12b":     ((7, 7),   (7, 7)),
+        "gemma_7b":             ((7, 7),   (7, 7)),
+        "glm4_9b":              ((7, 7),   (7, 7)),
+        "gemma2_9b":            ((13, 7),  (13, 7)),  # window 4096 > seq 512
+        "llama4_scout_17b_a16e": ((8, 8),  (8, 8)),
+        "deepseek_moe_16b":     ((8, 8),   (8, 8)),
+        "phi_3_vision_4_2b":    ((8, 8),   (7, 7)),   # patch stem: prefill only
+        "whisper_base":         ((20, 19), (11, 10)),  # encoder: prefill only
+    }
+
+    def test_golden_covers_zoo(self):
+        assert set(self.GOLDEN) == set(ARCH_IDS)
+
+    @pytest.mark.parametrize("name", ARCH_IDS)
+    def test_counts_stable(self, name):
+        cfg = get_config(name)
+        for phase, want in zip(PHASES, self.GOLDEN[name]):
+            g = build_model_graph(cfg, seq=512, phase=phase)
+            assert (g.n_nodes, len(g.lowered())) == want, (name, phase)
+
+
+class TestFamilyFeatures:
+    def test_gqa_shrinks_kv_projection(self):
+        cfg = get_config("glm4_9b")  # 32 heads, kv=2
+        g = build_model_graph(cfg, seq=64)
+        qkv = next(n for n in g.nodes if n.op == "qkv_proj")
+        assert qkv.dims["j"] == (32 + 2 * 2) * 128
+
+    def test_moe_emits_router_and_active_experts(self):
+        cfg = get_config("deepseek_moe_16b")  # 64 experts top-6 + 2 shared
+        g = build_model_graph(cfg, seq=64)
+        ops = g.ops()
+        assert ops["router"] == 1
+        up = next(n for n in g.nodes if n.op == "expert_up")
+        assert up.repeat == cfg.n_periods * 2 * (6 + 2)  # glu up/gate
+        assert up.dims["j"] == cfg.d_ff_expert
+
+    def test_jamba_ssm_lowers_dwconv(self):
+        g = build_model_graph(get_config("jamba_1_5_large_398b"), seq=64)
+        conv = [n for n in g.nodes if n.op == "ssm_conv"]
+        assert conv and all(n.kind == "dwconv" for n in conv)
+        assert conv[0].dims["kh"] == 4 and conv[0].dims["oh"] == 64
+
+    def test_vision_prefix_stem_and_context(self):
+        cfg = get_config("phi_3_vision_4_2b")  # 576-token prefix
+        g = build_model_graph(cfg, seq=64)
+        stem = next(n for n in g.nodes if n.op == "patch_embed")
+        assert stem.kind == "conv"
+        assert stem.dims["oh"] == stem.dims["ow"] == 24  # 576 = 24x24
+        scores = next(n for n in g.nodes if n.op == "attn_scores")
+        assert scores.dims["j"] == 64 + 576  # prefix extends the context
+        # decode: no stem, but the prefix stays in the KV context
+        gd = build_model_graph(cfg, seq=64, phase="decode")
+        assert not [n for n in gd.nodes if n.op == "patch_embed"]
+        assert next(n for n in gd.nodes
+                    if n.op == "attn_scores").dims["j"] == 64 + 576
+
+    def test_window_clamps_context(self):
+        cfg = get_config("gemma2_9b")  # local 4096 / global alternation
+        g = build_model_graph(cfg, seq=8192)
+        eff = sorted({n.dims["j"] for n in g.nodes if n.op == "attn_scores"})
+        assert eff == [4096, 8192]
+
+    def test_encdec_cross_attention(self):
+        cfg = get_config("whisper_base")  # 6+6L, enc seq 1500
+        g = build_model_graph(cfg, seq=64)
+        ops = g.ops()
+        assert ops["audio_embed"] == 1 and ops["cross_scores"] == 1
+        xs = next(n for n in g.nodes if n.op == "cross_scores")
+        assert xs.dims["j"] == 1500 and xs.repeat == 6 * cfg.n_heads
+        enc = [n for n in g.nodes if n.stage == "encoder"]
+        assert enc and all(n.repeat % cfg.n_enc_layers == 0 for n in enc)
+        gd = build_model_graph(cfg, seq=64, phase="decode")
+        assert not [n for n in gd.nodes if n.stage == "encoder"]
+        assert not [n for n in gd.nodes if n.op == "cross_kv_proj"]
+
+    def test_decode_is_gemv_shaped(self):
+        g = build_model_graph(get_config("gemma_7b"), seq=512,
+                              phase="decode", lm_head=False)
+        assert all(n.dims["i"] == 1 for n in g.nodes if n.kind == "gemm")
+        scores = next(n for n in g.nodes if n.op == "attn_scores")
+        assert scores.dims["j"] == 512  # full context as reduction/free dim
+
+
+class TestHandListParity:
+    """The hand-maintained transformer tables that lived in
+    benchmarks/nn_workloads.py before the frontend existed, pinned: their
+    shapes must appear in the frontend-lowered graphs."""
+
+    def test_gpt2_decode(self):
+        from benchmarks.nn_workloads import NETWORKS
+        d, f, H, prompt = 768, 3072, 12, 1000
+        old = [dict(i=1, j=3 * d, k=d), dict(i=1, j=prompt, k=64),
+               dict(i=1, j=64, k=prompt), dict(i=1, j=d, k=d),
+               dict(i=1, j=f, k=d), dict(i=1, j=d, k=f)]
+        got = _shapes(NETWORKS["GPT2"]())
+        for dims in old:
+            assert ("gemm", tuple(sorted(dims.items()))) in got, dims
+
+    def test_llama7b_decode(self):
+        from benchmarks.nn_workloads import NETWORKS
+        d, f, prompt = 4096, 11008, 1000
+        for bs, key in ((1, "LLaMA-7B-bs1"), (32, "LLaMA-7B-bs32")):
+            old = [dict(i=bs, j=3 * d, k=d), dict(i=bs, j=prompt, k=128),
+                   dict(i=bs, j=128, k=prompt), dict(i=bs, j=d, k=d),
+                   dict(i=bs, j=f, k=d), dict(i=bs, j=d, k=f)]
+            got = _shapes(NETWORKS[key]())
+            for dims in old:
+                assert ("gemm", tuple(sorted(dims.items()))) in got, (key,
+                                                                      dims)
+
+    def test_bert_prefill(self):
+        from benchmarks.nn_workloads import NETWORKS
+        d, f, seq = 768, 3072, 16
+        old = [dict(i=seq, j=3 * d, k=d), dict(i=seq, j=seq, k=64),
+               dict(i=seq, j=64, k=seq), dict(i=seq, j=d, k=d),
+               dict(i=seq, j=f, k=d), dict(i=seq, j=d, k=f)]
+        got = _shapes(NETWORKS["BERT"]())
+        for dims in old:
+            assert ("gemm", tuple(sorted(dims.items()))) in got, dims
+
+    def test_gemma_prefill_attention_shapes(self):
+        """The old dse.evaluate hand formulas for a dense GQA-free block,
+        checked against the lowered Gemma graph."""
+        cfg = get_config("gemma_7b")
+        seq, d, hd = 64, cfg.d_model, cfg.hd
+        got = _shapes(lower_model(cfg, seq=seq))
+        for dims in [
+            dict(i=seq, j=(cfg.n_heads + 2 * cfg.n_kv_heads) * hd, k=d),
+            dict(i=seq, j=seq, k=hd),           # scores
+            dict(i=seq, j=hd, k=seq),           # context
+            dict(i=seq, j=d, k=cfg.n_heads * hd),
+            dict(i=seq, j=cfg.d_ff, k=d),
+            dict(i=seq, j=d, k=cfg.d_ff),
+            dict(i=seq, j=cfg.vocab_size, k=d),  # LM head
+        ]:
+            assert ("gemm", tuple(sorted(dims.items()))) in got, dims
+
+
+class TestZooAndResolve:
+    def test_lower_zoo_phase_keys(self):
+        zoo = lower_zoo(["gemma_7b"], seq=32, reduced=True)
+        assert set(zoo) == {"gemma_7b"}
+        zoo2 = lower_zoo(["gemma_7b"], seq=32, reduced=True,
+                         phases=("prefill", "decode"))
+        assert set(zoo2) == {"gemma_7b@prefill", "gemma_7b@decode"}
+        with pytest.raises(ValueError):
+            lower_zoo(["gemma_7b"], phases=("train",))
+
+    def test_resolve_ids(self):
+        assert resolve_ids("all") == list(ARCH_IDS)
+        assert resolve_ids("gemma-7b,gemma_7b") == ["gemma_7b"]
+        with pytest.raises(KeyError):
+            resolve_ids("gpt5")
+
+    def test_unknown_block_kind_rejected(self):
+        cfg = ModelConfig(layer_pattern=(BlockSpec(kind="ssm2"),))
+        with pytest.raises(ValueError):
+            build_model_graph(cfg, seq=8)
