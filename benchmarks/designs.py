@@ -17,9 +17,11 @@ from repro.core.mapper import SpatialChoice
 __all__ = ["DESIGNS", "SET_TO_DESIGN", "build_design", "design_spatials"]
 
 # which generated ADG realizes each DSE dataflow set (conv family shown in
-# the Fig. 12-style interconnect demo; GEMM menus share the same class)
+# the Fig. 12-style interconnect demo; GEMM menus share the same class).
+# "attention_fused" is the score-stationary two-workload design: the QK and
+# PV stages share one FU array with P resident between them (Fig. 10).
 SET_TO_DESIGN = {"os": "Conv2d-OHOW", "ws": "Conv2d-ICOC",
-                 "switch": "Conv2d-MNICOC"}
+                 "switch": "Conv2d-MNICOC", "attention_fused": "Attention"}
 
 
 def _gemm_jk(P=16, name="gemm-jk"):
@@ -71,9 +73,11 @@ def _attn_qk(P=16):
 
 
 def _attn_pv(P=16):
+    # shares the (m, n) FU grid and the b/m/n extents with _attn_qk so the
+    # score tensor S -> P hands over shape-exactly between the two stages
     wl = W.attention_pv()
     return wl, build_dataflow(wl, spatial=[("m", P), ("n", P)],
-                              temporal=[("b", 2), ("m", 2), ("d", 32)],
+                              temporal=[("b", 2), ("m", 2), ("n", 2), ("d", 16)],
                               c=(0, 0), name="attn-pv")
 
 

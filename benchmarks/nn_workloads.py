@@ -127,7 +127,10 @@ def _effnetv2_s():
 def _transformer(name, d, n_heads, d_ff, n_layers, *, glu=False,
                  activation="gelu"):
     """Dense-transformer ModelConfig for the frontend lowering (the head
-    dim follows d_model // n_heads; MHA, no GQA — the paper's setups)."""
+    dim follows d_model // n_heads; MHA, no GQA — the paper's setups).
+    The derived tables keep ``fused_attention=False``: these are the
+    baseline-comparison shapes pinned by ``tests/test_model_graph.py``, one
+    GEMM row per attention stage."""
     return ModelConfig(name=name, d_model=d, n_heads=n_heads,
                        n_kv_heads=n_heads, d_ff=d_ff, glu=glu,
                        activation=activation,
@@ -142,12 +145,14 @@ _LLAMA7B = _transformer("llama-7b", 4096, 32, 11008, 32, glu=True,
 
 
 def _bert_base(seq=16):
-    return lower_model(_BERT, seq=seq, lm_head=False)
+    return lower_model(_BERT, seq=seq, lm_head=False,
+                       fused_attention=False)
 
 
 def _gpt2(prompt=1000):
     # one-token decode against a 1000-token prompt (paper setup)
-    return lower_model(_GPT2, seq=prompt, phase="decode", lm_head=False)
+    return lower_model(_GPT2, seq=prompt, phase="decode", lm_head=False,
+                       fused_attention=False)
 
 
 def _coatnet():
@@ -201,7 +206,7 @@ def _stable_diffusion():
 
 def _llama7b(bs=1, prompt=1000):
     return lower_model(_LLAMA7B, seq=prompt, batch=bs, phase="decode",
-                       lm_head=False)
+                       lm_head=False, fused_attention=False)
 
 
 NETWORKS = {

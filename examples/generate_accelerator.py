@@ -131,15 +131,54 @@ def run_dse_design(point: DesignPoint, net: str, pick: str,
           f"energy saving {gem.energy_pj/e.energy_pj:.2f}x")
 
 
+def verify_two_stage_rtl(dag, adg) -> None:
+    """Bit-exactness gate for the score-stationary fused attention design:
+    the emitted netlist executes the QK stage, the score tensor S is held
+    in the behavioral memory model, softmax runs as the PPU transform, and
+    the PV stage consumes the resident P — both stages must equal the
+    staged funcsim oracle exactly."""
+    import numpy as np
+
+    from repro.core.funcsim import staged_oracle
+    from repro.core.rtlsim import simulate_rtl_stages
+
+    qk, pv = adg.spec("attn-qk"), adg.spec("attn-pv")
+    rng = np.random.default_rng(0)
+    inputs = {}
+    for spec, names in ((qk, ("Q", "K")), (pv, ("V",))):
+        sizes = spec.dataflow.sizes()
+        for name in names:
+            shape = spec.workload.tensor_shape(
+                spec.workload.tensor(name), sizes)
+            inputs[name] = rng.integers(-3, 4, size=shape).astype(float)
+
+    def softmax(s):
+        e = np.exp(s - s.max(axis=-1, keepdims=True))
+        return e / e.sum(axis=-1, keepdims=True)
+
+    stages, resident = ["attn-qk", "attn-pv"], {"S": "P"}
+    refs = staged_oracle(adg, stages, inputs, resident=resident, ppu=softmax)
+    res = simulate_rtl_stages(dag, adg, stages, inputs, resident=resident,
+                              ppu=softmax)
+    for r, ref, name in zip(res, refs, stages):
+        assert np.array_equal(r.output, ref), \
+            f"stage {name}: netlist diverges from the funcsim oracle"
+    print(f"  rtlsim two-stage check: QK + PV bit-exact vs funcsim oracle "
+          f"(P resident, softmax on PPUs; "
+          f"{res[0].cycles}+{res[1].cycles} cycles)")
+
+
 def run_model_design(model_id: str, seq: int, emit: str | None = None,
                      point: DesignPoint | None = None) -> None:
     """One generated architecture, one foundation model, both phases.
 
     Lowers the full config through the model-graph frontend, generates the
-    fused interconnect of the design's wiring class (the paper's
-    LEGO-MNICOC for the default 256-FU ``switch`` point, or the ``--dse``
-    frontier pick's class), then maps the prefill pass and the decode step
-    onto the design point and compares each against the Gemmini baseline.
+    fused interconnect of the design's wiring class, then maps the prefill
+    pass and the decode step onto the design point and compares each
+    against the Gemmini baseline.  Attention-bearing models default to the
+    ``attention_fused`` wiring class: the score-stationary attn_qk+pv
+    design (paper Fig. 10), whose emitted netlist is verified bit-exactly
+    against the two-stage funcsim oracle before mapping.
     """
     cfg = get_config(model_id)
     graphs = {ph: build_model_graph(cfg, seq=seq, phase=ph)
@@ -150,8 +189,12 @@ def run_model_design(model_id: str, seq: int, emit: str | None = None,
           f"({g.macs() / 1e9:.1f} GMACs prefill @ seq {seq}) ==")
     print(g.summary(limit=16))
 
-    # 256 FUs / 256 KB / switch (the paper's budget) unless --dse picked one
-    point = point or DesignPoint()
+    # 256 FUs / 256 KB (the paper's budget) unless --dse picked a point;
+    # attention-bearing models get the score-stationary fused design
+    if point is None:
+        has_attn = any(n.kind in ("attn_qk", "attn_pv") for n in g.nodes)
+        point = DesignPoint(
+            dataflow_set="attention_fused" if has_attn else "switch")
     t0 = time.time()
     design_name = SET_TO_DESIGN[point.dataflow_set]
     print(f"== generating {design_name} interconnect "
@@ -161,6 +204,8 @@ def run_model_design(model_id: str, seq: int, emit: str | None = None,
     run_backend(dag)
     print(f"  generation time: {time.time()-t0:.1f}s "
           f"(paper: 28.7s at 256 FUs)")
+    if point.dataflow_set == "attention_fused":
+        verify_two_stage_rtl(dag, adg)
     if emit:
         emit_rtl(dag, emit)
 
@@ -172,10 +217,14 @@ def run_model_design(model_id: str, seq: int, emit: str | None = None,
           f"(closed-form, as in BENCH_models.json)")
     for key, rec in e.per_config.items():
         ph = key.split("@")[-1]
+        fused = ""
+        if "speedup_fused_attention" in rec:
+            fused = (f", fused attention "
+                     f"{rec['speedup_fused_attention']:.2f}x vs unfused")
         print(f"  {ph:>8}: {rec['cycles']/1e6:10.2f} Mcycles, "
               f"{rec['gops']:5.0f} GOP/s, util {rec['utilization']:.2f}, "
               f"{rec['speedup_vs_gemmini']:.2f}x vs Gemmini "
-              f"({rec['energy_vs_gemmini']:.2f}x energy)")
+              f"({rec['energy_vs_gemmini']:.2f}x energy){fused}")
 
 
 def main():

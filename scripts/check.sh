@@ -7,16 +7,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
-# --deselect: pre-existing seed failures from JAX API drift (xla
-# cost_analysis now returns a list; mesh API change), not regressions —
-# remove once fixed.
-python -m pytest -x -q \
-    --deselect tests/test_dryrun_tools.py::TestHloParse::test_matmul_matches_xla \
-    --deselect "tests/test_dryrun_tools.py::TestHloParse::test_scan_trip_multiplication[3]" \
-    --deselect "tests/test_dryrun_tools.py::TestHloParse::test_scan_trip_multiplication[9]" \
-    --deselect "tests/test_dryrun_tools.py::TestHloParse::test_scan_trip_multiplication[28]" \
-    --deselect tests/test_runtime.py::TestShardingRules::test_divisibility_fallback \
-    --deselect tests/test_runtime.py::TestShardingRules::test_param_rules_cover_all_archs
+python -m pytest -x -q
 
 echo
 echo "== mapper parity (batched engine vs scalar reference) =="
@@ -117,9 +108,21 @@ missing = [m for m in p["model_ids"]
            if not any(k == m or k.startswith(m + "@")
                       for k in p["winner"]["per_model"])]
 assert not missing, f"missing per-model perf: {missing}"
+# fused-attention gate: the sweep must evaluate the score-stationary
+# attention_fused set and record whether the one-architecture winner uses
+# it, plus the fused-vs-unfused speedup for the attention-bearing configs
+fa = p["fused_attention"]
+assert fa["evaluated"], "attention_fused set not evaluated by the sweep"
+assert isinstance(fa["winner_uses"], bool)
+assert fa["speedup_vs_unfused"], \
+    "no fused-vs-unfused attention speedups recorded"
+designs = {d["design"]["dataflow_set"] for d in p["designs"]}
+assert "attention_fused" in designs, "attention_fused missing from designs"
 print(f"BENCH_models.json OK: {len(p['model_ids'])} models, "
       f"winner {p['winner']['design']['name']} "
-      f"({p['winner']['metric']}={p['winner']['score']:.2f})")
+      f"({p['winner']['metric']}={p['winner']['score']:.2f}); "
+      f"fused attention evaluated, winner_uses={fa['winner_uses']}, "
+      f"{len(fa['speedup_vs_unfused'])} configs with fused speedup")
 PY
 if [ "$elapsed" -ge 60 ]; then
     echo "--models all --quick took ${elapsed}s (budget 60s)" >&2

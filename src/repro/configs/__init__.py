@@ -33,6 +33,8 @@ ALIASES.update({
     "gemma2-9b": "gemma2_9b",
     "glm4-9b": "glm4_9b",
     "whisper-base": "whisper_base",
+    "llama": "llama4_scout_17b_a16e",   # family shorthand for the CLIs
+    "llama4": "llama4_scout_17b_a16e",
 })
 
 

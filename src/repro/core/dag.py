@@ -77,6 +77,12 @@ class DAG:
         # codegen provenance consumed by emit/rtlsim (empty for hand-built DAGs)
         self.opnd_ports: dict[tuple[str, int], int] = {}  # (tensor, fu) -> nid
         self.fu_product: dict[int, int] = {}  # fu -> final multiplier node
+        # multi-*workload* provenance: distinct workload kinds fused into one
+        # design (score-stationary attention), in spec order, and which
+        # workload each dataflow executes — drives the workload-select ctrl
+        # field in emit and the per-stage operand muxing in rtlsim
+        self.workloads: list[str] = []
+        self.df_workload: dict[str, str] = {}
         # last delay-matching potentials D (pins schedule components whose
         # only coupling is elastic; see rtlsim._schedule)
         self.sched: dict[int, float] = {}
@@ -183,6 +189,28 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
     dag.dataflows = list(adg.dataflow_names)
     n_fus = adg.n_fus
 
+    # multi-workload provenance: one design may fuse dataflows of *distinct*
+    # workloads (attention_qk + attention_pv) whose FU operand networks must
+    # be muxed per stage
+    dag.workloads = list(dict.fromkeys(s.workload.name for s in adg.specs))
+    dag.df_workload = {s.dataflow.name: s.workload.name for s in adg.specs}
+    wl_dataflows = {w: tuple(s.dataflow.name for s in adg.specs
+                             if s.workload.name == w)
+                    for w in dag.workloads}
+    if len(dag.workloads) > 1:
+        # the FU compute plane is shared: every fused workload must use the
+        # same loop body and operand count, or the unused multiplier stage /
+        # operand slot would silently corrupt the other workload's products
+        shapes = {w: (next(s.workload.compute for s in adg.specs
+                           if s.workload.name == w),
+                      len(next(s.workload.inputs for s in adg.specs
+                               if s.workload.name == w)))
+                  for w in dag.workloads}
+        if len(set(shapes.values())) > 1:
+            raise NotImplementedError(
+                "multi-workload designs must agree on the FU loop body "
+                f"(compute kind and input-operand count); got {shapes}")
+
     _rtables: dict[tuple[str, str], dict] = {}
 
     def _rtable(df_name: str, tensor: str) -> dict:
@@ -246,13 +274,14 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
 
     # -- FU compute primitives ----------------------------------------------
     fu_out: dict[tuple[str, int], int] = {}  # (tensor, fu) -> producing node
-    fu_mul: dict[int, int] = {}
+    fu_mul: dict[int, int] = {}   # fu -> final (product) multiplier
+    fu_mul1: dict[int, int] = {}  # fu -> first-stage multiplier (operand in)
     fu_add: dict[int, int] = {}
 
     # first create all compute nodes so links can reference fu outputs
     for f in range(n_fus):
         mul = dag.add("mul", 2 * data_bits, fu=f)
-        fu_mul[f] = mul
+        fu_mul[f] = fu_mul1[f] = mul
         if any_mac2:
             mul2 = dag.add("mul", 2 * data_bits, fu=f, stage=2)
             dag.wire(mul, mul2)
@@ -327,21 +356,61 @@ def codegen(adg: ADG, data_bits: int = 8, acc_bits: int = 32) -> DAG:
                     port = ph
             in_port[(tensor, f)] = port
 
-    # wire operands into compute
+    # -- operand slots per *workload* ---------------------------------------
+    # workload w's input tensors feed the FU multiplier operand positions in
+    # order; a heterogeneous design (attention_qk + attention_pv) muxes the
+    # per-workload operand networks in front of each slot — the runtime
+    # workload switch of the score-stationary fused design.  The mux input
+    # order follows ``dag.workloads`` so the select value is the workload
+    # index (the workload-select ctrl field in emit).
+    n_slots = 3 if any_mac2 else 2
+    slot_tensors: list[list[tuple[str, str]]] = [[] for _ in range(n_slots)]
+    for w in dag.workloads:
+        w_inputs = next(s.workload.inputs for s in adg.specs
+                        if s.workload.name == w)
+        for k, t in enumerate(w_inputs[:n_slots]):
+            slot_tensors[k].append((w, t.name))
+
+    # dataflows per output tensor: drives psum-edge liveness so the shared
+    # adder plane only sums the active workload's reduction network
+    out_live = {ot: tuple(sorted(d for d, o in output_tensor.items()
+                                 if o == ot))
+                for ot in set(output_tensor.values())}
+
     for f in range(n_fus):
-        ins = [t for t in input_tensors if (t, f) in in_port]
-        # first two inputs feed the multiplier; third (mac2) feeds stage-2 mul
-        for t in ins[:2]:
-            dag.wire(in_port[(t, f)], fu_mul[f] if not any_mac2
-                     else dag.in_edges(fu_mul[f])[0].src, bits=data_bits)
-        if any_mac2 and len(ins) > 2:
-            dag.wire(in_port[(ins[2], f)], fu_mul[f], bits=data_bits)
+        for k in range(n_slots):
+            # one port per workload; a missing port in a heterogeneous design
+            # becomes a switch-served placeholder so every stage's operand
+            # physically exists (rtlsim injects its values at the port)
+            by_tensor: dict[str, list[str]] = {}
+            for w, tn in slot_tensors[k]:
+                if (tn, f) not in in_port and len(dag.workloads) > 1:
+                    in_port[(tn, f)] = dag.add(
+                        "wire", data_bits, users=set(wl_dataflows[w]),
+                        tensor=tn, fu=f, switch_port=True)
+                if (tn, f) in in_port:
+                    by_tensor.setdefault(tn, []).extend(wl_dataflows[w])
+            if not by_tensor:
+                continue
+            target = fu_mul[f] if (any_mac2 and k == 2) else fu_mul1[f]
+            if len(by_tensor) == 1:
+                tn = next(iter(by_tensor))
+                dag.wire(in_port[(tn, f)], target, bits=data_bits)
+            else:
+                mux = dag.add("mux", data_bits, fu=f, slot=k,
+                              ways=len(by_tensor), wl_mux=True)
+                for tn, dfs in by_tensor.items():
+                    dag.wire(in_port[(tn, f)], mux, bits=data_bits,
+                             live=tuple(sorted(dfs)))
+                dag.wire(mux, target, bits=data_bits)
 
         # output reduction / accumulation (dedup: fused dataflows sharing one
-        # output tensor must not wire the same psum port twice)
+        # output tensor must not wire the same psum port twice); per-tensor
+        # liveness keeps the inactive workload's psum network out of the sum
         for ot in dict.fromkeys(output_tensor.values()):
             if (ot, f) in in_port:
-                dag.wire(in_port[(ot, f)], fu_add[f], bits=acc_bits)
+                dag.wire(in_port[(ot, f)], fu_add[f], bits=acc_bits,
+                         live=out_live[ot])
 
         # stationary accumulator (e.g. Y revisit): acc register on the adder
         needs_acc = any(

@@ -14,9 +14,14 @@ The optimized :class:`~repro.core.dag.DAG` is lowered to a small netlist IR
 * one **control** module per dataflow spec (``<design>_ctrl_<df>``): the
   dataflow's address generators plus its mux-select and FIFO-depth
   configuration words (the §III-D "switching dataflows only rewrites matrix
-  values" property — selects and depths come from the ADG);
+  values" property — selects and depths come from the ADG).  Multi-
+  *workload* designs (score-stationary fused attention) add a third word:
+  ``wl_o``, the **workload-select field** — the index of the workload this
+  dataflow executes, driving the FU operand-network muxes that switch the
+  multipliers between e.g. the (Q, K) and (P, V) operand planes;
 * a **top level** with the runtime-switch mux fabric: ``df_sel`` picks which
-  control module's select/config/address words drive the shared datapath.
+  control module's select/config/address/workload words drive the shared
+  datapath.
 
 :func:`build_netlist` is deterministic in the DAG (stable node/edge order,
 no timestamps), so emission is snapshot-testable; :mod:`repro.core.rtlsim`
@@ -72,6 +77,41 @@ def _edge_live(dag: DAG, e) -> set[str]:
         return set(live)
     users = dag.users.get(e.src, set())
     return {u.split("#")[0] for u in users}
+
+
+def _edge_wl_gate(dag: DAG, e) -> list[int] | None:
+    """Workload indices an edge is exclusively live for, or ``None`` when it
+    serves every workload.  Drives the emitted psum gating: an input of the
+    shared adder plane that belongs to one workload's reduction network must
+    contribute zero while another workload runs — the netlist realizes the
+    same deselection :func:`repro.core.rtlsim._edge_active` applies in
+    simulation, so external simulators see identical semantics."""
+    live = e.meta.get("live")
+    if not live or len(dag.workloads) < 2:
+        return None
+    wls = {dag.df_workload.get(u.split("#")[0]) for u in live} - {None}
+    if not wls or wls == set(dag.workloads):
+        return None
+    idxs = sorted(dag.workloads.index(w) for w in wls
+                  if w in dag.workloads)
+    return idxs or None
+
+
+def _wl_mux_aligned(dag: DAG, edges) -> bool:
+    """True when a codegen workload mux has exactly one input per workload,
+    in ``dag.workloads`` order — then its select value *is* the workload
+    index and the shared ``wl_sel`` word can drive it directly."""
+    wls = dag.workloads
+    if len(wls) < 2 or len(edges) != len(wls):
+        return False
+    for i, e in enumerate(edges):
+        live = e.meta.get("live")
+        if not live:
+            return False
+        got = {dag.df_workload.get(u.split("#")[0]) for u in live}
+        if got != {wls[i]}:
+            return False
+    return True
 
 
 def mux_select(dag: DAG, nid: int, df_name: str,
@@ -370,14 +410,35 @@ def build_netlist(dag: DAG, name: str | None = None) -> Netlist:
     in_map = dag.in_edge_map()
 
     # -- select / config tables (shared with rtlsim) -----------------------
-    # mux slots: DAG muxes + address-fabric muxes at multi-addressed memports
+    # mux slots: DAG muxes + address-fabric muxes at multi-addressed
+    # memports.  Workload muxes — the FU operand-network switches of a
+    # multi-workload design whose inputs align one-per-workload — are
+    # driven by the shared workload-select word ``wl_sel`` instead of a
+    # packed per-mux slice (their select value IS the workload index).
+    wl_width = _clog2(max(len(dag.workloads), 2)) \
+        if len(dag.workloads) > 1 else 0
+    wl_muxes: set[int] = set()
     mux_slots: list[tuple[str, int, int]] = []  # (kind, nid, ways)
     for nid in node_ids:
         n = dag.nodes[nid]
         if n.kind == "mux" and len(in_map[nid]) > 1:
-            mux_slots.append(("mux", nid, len(in_map[nid])))
+            if n.meta.get("wl_mux") and _wl_mux_aligned(dag, in_map[nid]):
+                wl_muxes.add(nid)
+            else:
+                mux_slots.append(("mux", nid, len(in_map[nid])))
         elif n.kind == "memport" and len(_split_edges(in_map[nid])[0]) > 1:
             mux_slots.append(("addr", nid, len(_split_edges(in_map[nid])[0])))
+    # wl_sel is also needed when the shared adder plane has per-workload
+    # reduction inputs to gate, even if every operand mux happens to align
+    needs_wl = bool(wl_muxes)
+    if wl_width and not needs_wl:
+        needs_wl = any(
+            _edge_wl_gate(dag, e) is not None
+            for nid in node_ids
+            if dag.nodes[nid].kind in ("add", "reduce", "acc")
+            for e in in_map[nid])
+    if not needs_wl:
+        wl_width = 0
     sel_slice: dict[int, tuple[int, int]] = {}  # nid -> (lo, width)
     sel_width = 0
     for _, nid, ways in mux_slots:
@@ -418,6 +479,8 @@ def build_netlist(dag: DAG, name: str | None = None) -> Netlist:
     dp.ports.append(("input", 1, "rst"))
     if sel_width:
         dp.ports.append(("input", sel_width, "sel"))
+    if wl_width:
+        dp.ports.append(("input", wl_width, "wl_sel"))
     if cfg_width:
         dp.ports.append(("input", cfg_width, "fifo_cfg"))
     ext_ports: list[tuple[str, int, str]] = []  # bubbled up to top verbatim
@@ -447,12 +510,27 @@ def build_netlist(dag: DAG, name: str | None = None) -> Netlist:
         n = dag.nodes[nid]
         dp.wires.append((n.bits, net(nid)))
 
+    def wl_gated(e, expr: str, label: str) -> str:
+        """Zero a summing-node input while its workload is not selected —
+        the netlist-side counterpart of rtlsim's liveness filtering."""
+        idxs = _edge_wl_gate(dag, e) if wl_width else None
+        if idxs is None:
+            return expr
+        out = f"wg_{label}"
+        dp.wires.append((e.bits, out))
+        cond = " || ".join(f"(wl_sel == {wl_width}'d{i})" for i in idxs)
+        dp.assigns.append((out, f"({cond}) ? {expr} : {zero(e.bits)}"))
+        return out
+
     for nid in dp_nodes:
         n = dag.nodes[nid]
         kind = n.kind
         addr_edges, val_edges = _split_edges(in_map[nid])
         ins = [shifted(e, dp, f"{e.src}_{nid}_{i}")
                for i, e in enumerate(val_edges)]
+        if kind in ("add", "reduce", "acc"):
+            ins = [wl_gated(e, s, f"{e.src}_{nid}_{i}")
+                   for i, (e, s) in enumerate(zip(val_edges, ins))]
         W = [("W", str(max(n.bits, 1)))]
         clkrst = [("clk", "clk"), ("rst", "rst")]
         meta = ", ".join(f"{k}={v}" for k, v in sorted(n.meta.items())
@@ -508,10 +586,15 @@ def build_netlist(dag: DAG, name: str | None = None) -> Netlist:
             else:
                 ways = len(ins)
                 lib_kinds.add(("mux", ways))
-                lo, w = sel_slice[nid]
                 conns = [(f"d{i}", s) for i, s in enumerate(ins)]
-                conns += [("sel", f"sel[{lo + w - 1}:{lo}]"),
-                          ("y", net(nid))]
+                if nid in wl_muxes:
+                    # operand-network switch: the workload-select field
+                    # drives it directly (select value == workload index)
+                    sel_expr = "wl_sel"
+                else:
+                    lo, w = sel_slice[nid]
+                    sel_expr = f"sel[{lo + w - 1}:{lo}]"
+                conns += [("sel", sel_expr), ("y", net(nid))]
                 dp.instances.append(Instance(
                     f"u{nid}", f"lego_mux{ways}", W, conns, comment))
         elif kind == "acc":
@@ -658,6 +741,12 @@ def build_netlist(dag: DAG, name: str | None = None) -> Netlist:
                     v = mux_select(dag, nid, df, edges=in_map[nid])
                 parts.append(f"{w}'d{v}")
             cm.assigns.append(("sel_o", "{" + ", ".join(parts) + "}"))
+        if wl_width:
+            # workload-select field: which workload's operand plane this
+            # dataflow drives through the FU input muxes
+            cm.ports.append(("output", wl_width, "wl_o"))
+            widx = dag.workloads.index(dag.df_workload[df])
+            cm.assigns.append(("wl_o", f"{wl_width}'d{widx}"))
         if cfg_width:
             cm.ports.append(("output", cfg_width, "cfg_o"))
             parts = []
@@ -699,6 +788,9 @@ def build_netlist(dag: DAG, name: str | None = None) -> Netlist:
         if sel_width:
             top.wires.append((sel_width, f"sel_{sfx}"))
             conns.append(("sel_o", f"sel_{sfx}"))
+        if wl_width:
+            top.wires.append((wl_width, f"wl_{sfx}"))
+            conns.append(("wl_o", f"wl_{sfx}"))
         if cfg_width:
             top.wires.append((cfg_width, f"cfg_{sfx}"))
             conns.append(("cfg_o", f"cfg_{sfx}"))
@@ -719,11 +811,14 @@ def build_netlist(dag: DAG, name: str | None = None) -> Netlist:
         return out
 
     sel_active = fabric(sel_width, "sel")
+    wl_active = fabric(wl_width, "wl")
     cfg_active = fabric(cfg_width, "cfg")
 
     dconns = [("clk", "clk"), ("rst", "rst")]
     if sel_width:
         dconns.append(("sel", sel_active or f"{sel_width}'d0"))
+    if wl_width:
+        dconns.append(("wl_sel", wl_active or f"{wl_width}'d0"))
     if cfg_width:
         dconns.append(("fifo_cfg", cfg_active or f"{cfg_width}'d0"))
     for df in dataflows:

@@ -34,7 +34,8 @@ from .adg import ADG
 from .affine import mixed_radix_vector
 from .workload import Workload
 
-__all__ = ["oracle", "simulate", "SimResult"]
+__all__ = ["oracle", "simulate", "SimResult", "run_stages",
+           "simulate_stages", "staged_oracle"]
 
 
 def oracle(wl: Workload, sizes: dict[str, int],
@@ -149,3 +150,78 @@ def simulate(adg: ADG, df_name: str, inputs: dict[str, np.ndarray]) -> SimResult
 
     return SimResult(out, fills, mem_reads, link_transfers, T + int(np.max(
         coords @ df.c)) if n else T)
+
+
+# ---------------------------------------------------------------------------
+# multi-workload staged execution (score-stationary fused attention)
+# ---------------------------------------------------------------------------
+
+def run_stages(adg: ADG, df_names, inputs, resident, ppu, stage_fn):
+    """Shared stage driver (used by funcsim, the oracle, and rtlsim): run
+    ``stage_fn(adg, df_name, stage_inputs)`` per stage, handing each
+    ``resident``-mapped output tensor (through the optional element-wise
+    ``ppu`` transform) to later stages as an input.  Every stage input is
+    shape-checked against that stage's dataflow extents, so a resident
+    handover between disagreeing stage tilings fails loudly."""
+    resident = dict(resident or {})
+    for dst in resident.values():
+        if dst in inputs:
+            raise ValueError(
+                f"input tensor {dst!r} is produced by a resident handover; "
+                f"it must not be supplied externally")
+    avail = dict(inputs)
+    results = []
+    for dfn in df_names:
+        spec = adg.spec(dfn)
+        stage_in = {}
+        for t in spec.workload.inputs:
+            if t.name not in avail:
+                raise KeyError(
+                    f"stage {dfn!r} needs tensor {t.name!r}: not an external "
+                    f"input and not produced by an earlier resident stage")
+            arr = avail[t.name]
+            want = spec.workload.tensor_shape(t, spec.dataflow.sizes())
+            if tuple(arr.shape) != tuple(want):
+                raise ValueError(
+                    f"stage {dfn!r} tensor {t.name!r} has shape {arr.shape},"
+                    f" dataflow expects {want} — stage dataflows must agree "
+                    f"on the shared dims")
+            stage_in[t.name] = arr
+        res = stage_fn(adg, dfn, stage_in)
+        results.append(res)
+        dst = resident.get(spec.workload.output.name)
+        if dst is not None:
+            out = getattr(res, "output", res)
+            avail[dst] = out if ppu is None else ppu(out)
+    return results
+
+
+def simulate_stages(adg: ADG, df_names: list[str],
+                    inputs: dict[str, np.ndarray],
+                    resident: dict[str, str] | None = None,
+                    ppu=None) -> list[SimResult]:
+    """Cycle-accurate multi-workload execution of one fused ADG.
+
+    ``df_names`` are executed in order; ``resident`` maps a stage's output
+    tensor to the input tensor it stays resident as for a later stage (the
+    fused attention design uses ``{"S": "P"}`` — no HBM round trip for the
+    score tensor), with ``ppu`` the optional element-wise PPU transform
+    (softmax) applied at the handover.  Returns one :class:`SimResult` per
+    stage.
+    """
+    return run_stages(adg, df_names, inputs, resident, ppu, simulate)
+
+
+def staged_oracle(adg: ADG, df_names: list[str],
+                  inputs: dict[str, np.ndarray],
+                  resident: dict[str, str] | None = None,
+                  ppu=None) -> list[np.ndarray]:
+    """Reference semantics of a staged schedule: the loop-nest
+    :func:`oracle` per stage with the same resident-tensor handover —
+    the two-stage oracle the netlist simulation is checked against."""
+
+    def stage_fn(a: ADG, dfn: str, stage_in):
+        spec = a.spec(dfn)
+        return oracle(spec.workload, spec.dataflow.sizes(), stage_in)
+
+    return run_stages(adg, df_names, inputs, resident, ppu, stage_fn)

@@ -26,7 +26,7 @@ runtime-programmable (§II).
 from __future__ import annotations
 
 from collections import defaultdict, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -38,7 +38,8 @@ from .workload import Workload
 __all__ = ["PhysicalLink", "FusedTensorPlan", "DataflowSolution",
            "solve_dataflow", "fuse_tensor", "naive_merge",
            "data_node_pressure", "estimate_data_nodes",
-           "DesignScore", "score_fused_design", "score_design_over_zoo"]
+           "DesignScore", "score_fused_design", "score_design_over_zoo",
+           "attention_fusion_viable", "apply_attention_fusion"]
 
 
 @dataclass
@@ -338,6 +339,96 @@ def estimate_data_nodes(n_fus: int, tensor_names: list[str] | tuple[str, ...]
     return {t: per_tensor for t in tensor_names}
 
 
+# ---------------------------------------------------------------------------
+# score-stationary attention fusion (paper Fig. 10 "Attention")
+# ---------------------------------------------------------------------------
+
+def attention_fusion_viable(dims: dict[str, int], hw) -> bool:
+    """Can P = softmax(S) stay resident between the QK and PV stages?
+
+    The fused design streams the batched ``b`` axis temporally, so one
+    ``m × n`` score slice (data precision — P is the post-softmax tensor
+    the PPUs write back in place) is the intermediate-tensor footprint that
+    must fit on chip.  The slice is held partly in the FU array itself
+    (score-stationary: one element per (m, n)-tile FU) and partly in the
+    P banks behind its data nodes, so the capacity check is against the
+    whole on-chip buffer; the data-node pressure of the P plan (or the √N
+    estimate when no ADG is built — :func:`estimate_data_nodes`) already
+    prices the bank traffic of the non-resident remainder in the perf model.
+    """
+    return dims["m"] * dims["n"] * hw.data_bytes <= hw.buffer_bytes
+
+
+def _apply_dram_credit(perf, credit_bytes: float, hw):
+    """Return a copy of ``perf`` with ``credit_bytes`` of DRAM traffic
+    elided (the score writeback / score re-read the fusion removes).
+
+    The per-candidate compute-cycle term is not recorded in
+    :class:`~repro.core.perf_model.LayerPerf`, so for memory-bound layers it
+    is reconstructed from the padded MAC count (``macs / utilization /
+    n_fus`` — exact up to the systolic fill term, which only matters in the
+    rare case the credit flips the layer to compute-bound).  Cycles never
+    drop below that reconstruction and never rise; energy loses the DRAM
+    energy of the elided bytes plus the static energy of the saved cycles.
+    """
+    credit = min(float(credit_bytes), perf.dram_bytes)
+    if credit <= 0.0:
+        return perf
+    new_dram = perf.dram_bytes - credit
+    core = perf.cycles - perf.ppu_cycles       # == max(compute, mem_cycles)
+    bound = perf.bound
+    if bound == "memory":
+        compute_est = perf.macs / max(perf.utilization, 1e-12) / hw.n_fus
+        mem_new = new_dram / hw.bytes_per_cycle
+        new_core = min(core, max(compute_est, mem_new))
+        bound = "memory" if mem_new >= compute_est else "compute"
+    else:
+        new_core = core
+    new_cycles = new_core + perf.ppu_cycles
+    saved_static_pj = hw.static_mw * (perf.cycles - new_cycles) \
+        / hw.freq_ghz * 1e-3
+    from .cost import DRAM_PJ_PER_BYTE  # local: cost->dag->adg->fusion cycle
+    return replace(perf, dram_bytes=new_dram, cycles=new_cycles, bound=bound,
+                   energy_pj=max(0.0, perf.energy_pj
+                                 - credit * DRAM_PJ_PER_BYTE
+                                 - saved_static_pj))
+
+
+def apply_attention_fusion(layers, perfs, hw) -> int:
+    """P-resident credit for matched ``attention_qk``/``attention_pv`` rows.
+
+    ``layers`` is the ``(workload, dims, repeat, ppu_elements)`` row list of
+    one model and ``perfs`` the per-row :class:`LayerPerf` results (mutated
+    in place).  A QK row pairs with the PV row of identical ``(dims,
+    repeat)`` — the frontend emits them as one fused op pair.  For every
+    viable pair the QK stage loses the raw-score writeback
+    (``b·m·n`` accumulator-precision bytes) and the PV stage loses the
+    post-softmax score read (``b·m·n`` data-precision bytes); the softmax
+    itself still runs on the PPUs and is charged unchanged.  Returns the
+    number of pairs fused.
+    """
+    pending: dict[tuple, list[int]] = {}
+    fused = 0
+    for idx, (wl, dims, rep, _) in enumerate(layers):
+        key = (tuple(sorted(dims.items())), rep)
+        if wl.name == "attention_qk":
+            pending.setdefault(key, []).append(idx)
+        elif wl.name == "attention_pv":
+            q = pending.get(key)
+            if not q:
+                continue
+            qi = q.pop(0)
+            if not attention_fusion_viable(dims, hw):
+                continue
+            n_el = dims["b"] * dims["m"] * dims["n"]
+            perfs[qi] = _apply_dram_credit(perfs[qi],
+                                           n_el * hw.acc_bytes, hw)
+            perfs[idx] = _apply_dram_credit(perfs[idx],
+                                            n_el * hw.data_bytes, hw)
+            fused += 1
+    return fused
+
+
 @dataclass
 class DesignScore:
     """Aggregate of one design evaluated across a list of layer workloads."""
@@ -375,6 +466,7 @@ def score_fused_design(
     objective: str = "cycles",
     mapping_fn=None,
     batch_mapping_fn=None,
+    attention_fusion: bool = True,
 ) -> DesignScore:
     """Map every layer of ``layers`` onto one fused design and aggregate.
 
@@ -391,6 +483,12 @@ def score_fused_design(
     ``mapping_fn(wl, dims, sps, hw, data_nodes_per_tensor, ppu_elements,
     objective)`` forces the per-layer path instead.  Aggregation always
     walks ``layers`` in order, so totals are independent of the engine.
+
+    With ``attention_fusion=True`` (default) rows lowered as the fused
+    ``attention_qk``/``attention_pv`` pair get the score-stationary
+    P-residency credit (:func:`apply_attention_fusion`) after mapping —
+    callers score a non-fused design by handing it the plain-GEMM fallback
+    rows instead (:func:`repro.frontend.lower.unfuse_attention_rows`).
 
     This is the paper's "one generated architecture serves diverse models"
     scoring loop, previously private wiring inside ``benchmarks/e2e.py``.
@@ -431,6 +529,9 @@ def score_fused_design(
             for i, p in zip(idxs, ps):
                 perfs[i] = p
 
+    if attention_fusion:
+        apply_attention_fusion(layers, perfs, hw)
+
     score = DesignScore()
     for idx, (_, _, rep, _) in enumerate(layers):
         perf = perfs[idx]
@@ -448,6 +549,7 @@ def score_design_over_zoo(
     data_nodes_per_tensor: dict[str, int] | None = None,
     mapping_fn=None,
     batch_mapping_fn=None,
+    attention_fusion: bool = True,
 ) -> dict[str, DesignScore]:
     """Score **one** candidate design across a whole model zoo.
 
@@ -478,7 +580,8 @@ def score_design_over_zoo(
         out[model] = score_fused_design(
             layers, spatials, hw, objective=objective,
             data_nodes_per_tensor=data_nodes_per_tensor,
-            mapping_fn=mapping_fn, batch_mapping_fn=batch_mapping_fn)
+            mapping_fn=mapping_fn, batch_mapping_fn=batch_mapping_fn,
+            attention_fusion=attention_fusion)
     return out
 
 

@@ -6,7 +6,10 @@ Given a layer (workload + true dims) and the spatial dataflows a design
 supports, the mapper pads dims to tileable sizes, enumerates spatial-array
 factorizations, tile splits and a set of canonical loop orders, evaluates
 each with the perf model, and returns the best mapping (min cycles, energy
-as tie-break).
+as tie-break).  Two-level tile splits (``_tile_candidates``) are part of
+the default enumeration — ``tile_search=False`` restores the historical
+narrower space; the scalar-vs-batch parity suite covers the tiled
+candidates, which is what let the default flip on.
 
 Candidate enumeration (:func:`enumerate_candidates`) is shared between two
 evaluation engines:
@@ -83,7 +86,9 @@ def _ceil_to(x: int, m: int) -> int:
 
 @functools.lru_cache(maxsize=None)
 def _tile_candidates(r: int) -> tuple[int, ...]:
-    """Candidate inner-tile sizes for a loop of trip count r."""
+    """Candidate inner-tile sizes for a loop of trip count r (part of the
+    default enumeration since tile search went default-on; the batched
+    engine scores the widened candidate set in the same kernel pass)."""
     cands = {1, r}
     for t in (2, 4, 8, 16, 32, 64):
         if t < r:
@@ -129,7 +134,8 @@ def _orders(dims: list[str], wl: Workload, max_orders: int = 8) -> list[list[str
 def _tile_splits(temporal: tuple[tuple[str, int], ...]):
     """Two-level tile variants of ``temporal``: one loop's trip ``T`` becomes
     an outer ``T // t`` at its original depth plus an inner tile ``t``
-    innermost (classic inner-tiling; opt-in via ``tile_search=True``)."""
+    innermost (classic inner-tiling; default-on, disable with
+    ``tile_search=False``)."""
     for p, (d, T) in enumerate(temporal):
         for t in _tile_candidates(T):
             if t <= 1 or t >= T or T % t:
@@ -143,7 +149,7 @@ def enumerate_candidates(
     dims: dict[str, int],
     spatials: list[SpatialChoice],
     hw: HWConfig,
-    tile_search: bool = False,
+    tile_search: bool = True,
 ) -> list[Candidate]:
     """All deduplicated mapping candidates for one layer.
 
@@ -211,7 +217,7 @@ def best_mapping(
     ppu_elements: float = 0.0,
     objective: str = "cycles",  # "cycles" | "energy" | "edp"
     engine: str = "batch",      # "batch" | "scalar"
-    tile_search: bool = False,
+    tile_search: bool = True,
 ) -> Mapping:
     if engine == "batch":
         from .mapper_batch import best_mappings

@@ -62,7 +62,7 @@ def build_batch(
     dims_list: list[dict[str, int]],
     spatials: list[SpatialChoice],
     hw: HWConfig,
-    tile_search: bool = False,
+    tile_search: bool = True,
 ) -> CandidateBatch:
     """Enumerate + lower the candidates of every layer into one batch."""
     D = len(wl.iter_dims)
@@ -155,7 +155,7 @@ def best_mappings(
     hw: HWConfig,
     data_nodes_per_tensor: dict[str, int] | None = None,
     objective: str = "cycles",
-    tile_search: bool = False,
+    tile_search: bool = True,
 ) -> list[Mapping]:
     """Best mapping for every ``(dims, ppu_elements)`` query of one workload.
 

@@ -41,7 +41,8 @@ from .adg import ADG
 from .dag import DAG
 from .emit import fifo_depth_for, fifo_programmed_delay, mux_select
 
-__all__ = ["RTLSimResult", "RTLTimingError", "simulate_rtl"]
+__all__ = ["RTLSimResult", "RTLTimingError", "simulate_rtl",
+           "simulate_rtl_stages"]
 
 
 class RTLTimingError(AssertionError):
@@ -63,6 +64,19 @@ def _active(users: set[str], df_name: str) -> bool:
     return any(u.split("#")[0] == df_name for u in users)
 
 
+def _edge_active(e, df_name: str) -> bool:
+    """An edge with explicit codegen liveness serves only those dataflows.
+
+    Multi-*workload* designs wire one reduction/psum network per output
+    tensor into the shared adder plane and one operand network per workload
+    into the multipliers; codegen records ``live`` on those edges so the
+    inactive workload's network drops out of the sum exactly as the
+    workload-select muxes deselect it in hardware.  Edges without the
+    annotation (the workload-homogeneous common case) are always active."""
+    live = e.meta.get("live")
+    return live is None or any(u.split("#")[0] == df_name for u in live)
+
+
 def _active_in(dag: DAG, df_name: str, cut_ports: set[int], in_map):
     """Value-dependency edges per node under the *active* dataflow.
 
@@ -70,8 +84,9 @@ def _active_in(dag: DAG, df_name: str, cut_ports: set[int], in_map):
     FUs (one per dataflow) — a structural cycle that real hardware resolves
     because the runtime muxes deselect the inactive direction.  The stream
     evaluator mirrors that: a mux depends only on its selected input, an
-    idle FIFO is cut, and a port served entirely by the distribution switch
-    needs no upstream value at all."""
+    idle FIFO is cut, a port served entirely by the distribution switch
+    needs no upstream value at all, and compute nodes of a multi-workload
+    design combine only the edges live under the active workload."""
 
     def deps(nid: int) -> list:
         node = dag.nodes[nid]
@@ -83,6 +98,8 @@ def _active_in(dag: DAG, df_name: str, cut_ports: set[int], in_map):
             return [ins[sel]] if ins else []
         if node.kind == "fifo" and fifo_depth_for(node.meta, df_name) is None:
             return []
+        if node.kind in ("mul", "add", "reduce", "acc"):
+            return [e for e in ins if _edge_active(e, df_name)]
         return ins
 
     return deps
@@ -378,6 +395,38 @@ def simulate_rtl(dag: DAG, adg: ADG, df_name: str,
     checks["overridden_ports"] = sum(len(v) for v in overrides.values())
     return RTLSimResult(out, W_total, max(S.values()), fills, mem_reads,
                         link_transfers, checks)
+
+
+def simulate_rtl_stages(dag: DAG, adg: ADG, df_names: list[str],
+                        inputs: dict[str, np.ndarray],
+                        resident: dict[str, str] | None = None,
+                        ppu=None) -> list[RTLSimResult]:
+    """Execute a multi-*workload* schedule on one emitted netlist.
+
+    ``df_names`` runs in order (the runtime re-programs ``df_sel`` /
+    ``wl_sel`` between stages); ``resident`` maps a stage's output tensor to
+    the input tensor of a later stage it stays resident as — for the
+    score-stationary fused attention design ``{"S": "P"}``: the score tensor
+    written by the QK stage is *held in the behavioral memory model* and
+    served as the PV stage's P operand, never round-tripping through the
+    testbench's DRAM side.  ``ppu`` is the optional element-wise PPU
+    transform applied at the handover (softmax in the paper; the identity
+    when omitted), executed in float64 by the testbench exactly as the
+    staged funcsim oracle does, so the cross-check stays bit-exact.
+
+    The caller provides only the external inputs (Q, K, V); providing a
+    tensor that a ``resident`` handover would overwrite is an error, and
+    every stage input is shape-checked against that stage's dataflow
+    extents (:func:`repro.core.funcsim.run_stages` — the same driver the
+    staged funcsim oracle uses, so both sides enforce identical stage
+    contracts).  Returns one :class:`RTLSimResult` per stage.
+    """
+    from .funcsim import run_stages
+
+    def stage_fn(a: ADG, dfn: str, stage_in):
+        return simulate_rtl(dag, a, dfn, stage_in)
+
+    return run_stages(adg, df_names, inputs, resident, ppu, stage_fn)
 
 
 def _time_vectors(T: int, R_T: np.ndarray) -> np.ndarray:

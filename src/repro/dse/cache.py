@@ -29,7 +29,9 @@ from repro.core.workload import Workload
 
 __all__ = ["MappingCache", "mapping_key", "atomic_write_json"]
 
-_SCHEMA = 1  # bump to invalidate stale caches when the perf model changes
+_SCHEMA = 2  # bump to invalidate stale caches when the perf model changes
+# (2: tile search default-on widened the candidate space — cached winners
+# from schema 1 could be stale narrower-space results)
 
 
 def atomic_write_json(path: str, payload, **dump_kw) -> None:

@@ -24,6 +24,10 @@ __all__ = ["DesignPoint", "DesignSpace", "SPACES", "DATAFLOW_SETS"]
 # implement.  "os" keeps outputs resident (accumulate in place), "ws" streams
 # outputs across a stationary-weight array, "switch" fuses both into one
 # runtime-switchable design (Conv2d-MNICOC / GEMM-MJ in the paper).
+# "attention_fused" extends "switch" with menus for the batched attention
+# workloads: both stages parallelize (m, n), so the score tensor P stays
+# resident in the FU array between the QK and PV stages (paper Fig. 10
+# "Attention") — rows of heterogeneous workload kinds map onto one design.
 DATAFLOW_SETS: dict[str, dict[str, tuple[SpatialChoice, ...]]] = {
     "os": {
         "gemm": (SpatialChoice(("i", "j"), (1, 1), "ij"),),
@@ -41,6 +45,19 @@ DATAFLOW_SETS: dict[str, dict[str, tuple[SpatialChoice, ...]]] = {
         "conv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),
                    SpatialChoice(("ic", "oc"), (1, 1), "icoc")),
         "dwconv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),),
+    },
+    "attention_fused": {
+        "gemm": (SpatialChoice(("i", "j"), (1, 1), "ij"),
+                 SpatialChoice(("k", "j"), (1, 1), "jk")),
+        "conv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),
+                   SpatialChoice(("ic", "oc"), (1, 1), "icoc")),
+        "dwconv2d": (SpatialChoice(("ow", "oh"), (0, 0), "ohow"),),
+        # score-stationary pair: S/P[b,m,n] lives at FU (m,n) across stages;
+        # the (b,n) variant keeps residency for GEMV-shaped decode (m = 1)
+        "attention_qk": (SpatialChoice(("m", "n"), (0, 0), "attn-mn"),
+                         SpatialChoice(("b", "n"), (0, 0), "attn-bn")),
+        "attention_pv": (SpatialChoice(("m", "n"), (0, 0), "attn-mn"),
+                         SpatialChoice(("b", "n"), (0, 0), "attn-bn")),
     },
 }
 
@@ -79,6 +96,13 @@ class DesignPoint:
     def hw_config(self) -> HWConfig:
         return HWConfig(n_fus=self.n_fus, buffer_bytes=self.buffer_bytes,
                         dram_gbps=self.dram_gbps, n_ppus=self.n_ppus)
+
+    def supports(self, workload_name: str) -> bool:
+        """Whether this design's dataflow set can map ``workload_name`` —
+        heterogeneous workload sets (``attention_fused``) carry menus for
+        the attention pair; the classic sets trigger the evaluator's
+        plain-GEMM fallback lowering instead."""
+        return workload_name in DATAFLOW_SETS[self.dataflow_set]
 
     def spatials(self, workload_name: str) -> list[SpatialChoice]:
         menu = DATAFLOW_SETS[self.dataflow_set]
@@ -184,23 +208,27 @@ class DesignSpace:
 
 
 SPACES: dict[str, DesignSpace] = {
-    # 2–4 points: CI smoke sweeps and unit tests
+    # few points: CI smoke sweeps and unit tests (attention_fused included
+    # so `--models all --quick` always evaluates the paper's fused design)
     "tiny": DesignSpace(
         name="tiny", n_fus=(64, 128), buffer_kb=(128,),
-        dataflow_sets=("os", "switch")),
+        dataflow_sets=("os", "switch", "attention_fused")),
     # the acceptance sweep: ≥20 candidates, exhaustive
     "small": DesignSpace(
         name="small", n_fus=(64, 128, 256, 512, 1024),
-        buffer_kb=(128, 256, 512), dataflow_sets=("os", "ws", "switch")),
+        buffer_kb=(128, 256, 512),
+        dataflow_sets=("os", "ws", "switch", "attention_fused")),
     # adds a bandwidth axis; still exhaustive on a beefy machine
     "medium": DesignSpace(
         name="medium", n_fus=(64, 128, 256, 512, 1024, 2048),
         buffer_kb=(128, 256, 512, 1024), dram_gbps=(16.0, 32.0),
-        dataflow_sets=("os", "ws", "switch"), max_area_mm2=20.0),
+        dataflow_sets=("os", "ws", "switch", "attention_fused"),
+        max_area_mm2=20.0),
     # evolutionary territory
     "large": DesignSpace(
         name="large", n_fus=(64, 128, 256, 512, 1024, 2048, 4096),
         buffer_kb=(64, 128, 256, 512, 1024, 2048),
         dram_gbps=(8.0, 16.0, 32.0, 64.0),
-        dataflow_sets=("os", "ws", "switch"), max_area_mm2=40.0),
+        dataflow_sets=("os", "ws", "switch", "attention_fused"),
+        max_area_mm2=40.0),
 }

@@ -11,10 +11,12 @@ deduplicated ``(kind, dims, repeat, nontensor)`` rows that
 :func:`repro.core.fusion.score_fused_design` and the DSE evaluator consume.
 """
 
-from .lower import Row, lower_model, lower_zoo, merge_rows, zoo_key
+from .lower import (ATTENTION_KINDS, Row, has_attention_rows, lower_model,
+                    lower_zoo, merge_rows, unfuse_attention_rows, zoo_key)
 from .model_graph import PHASES, ModelGraph, OpNode, build_model_graph
 
 __all__ = [
     "OpNode", "ModelGraph", "build_model_graph", "PHASES",
     "Row", "merge_rows", "lower_model", "lower_zoo", "zoo_key",
+    "ATTENTION_KINDS", "has_attention_rows", "unfuse_attention_rows",
 ]

@@ -53,9 +53,10 @@ class OpNode:
 
     ``op`` is the semantic operator name (``qkv_proj``, ``attn_scores``,
     ``expert_up``, ``ssm_conv``, ...); ``kind`` is the LEGO workload it maps
-    to (``gemm`` | ``conv`` | ``dwconv``, the row-kind strings of
-    :mod:`repro.dse.evaluate`); ``dims`` uses that workload's iteration-dim
-    names; ``nontensor`` elements run on the PPUs once per node execution.
+    to (``gemm`` | ``conv`` | ``dwconv`` | ``attn_qk`` | ``attn_pv``, the
+    row-kind strings of :mod:`repro.dse.evaluate`); ``dims`` uses that
+    workload's iteration-dim names; ``nontensor`` elements run on the PPUs
+    once per node execution.
     """
 
     name: str
@@ -126,8 +127,21 @@ class ModelGraph:
 
 def build_model_graph(cfg: ModelConfig, *, seq: int = 512, batch: int = 1,
                       phase: str = "prefill",
-                      lm_head: bool = True) -> ModelGraph:
-    """Walk ``cfg`` into a :class:`ModelGraph` for one execution phase."""
+                      lm_head: bool = True,
+                      fused_attention: bool = True) -> ModelGraph:
+    """Walk ``cfg`` into a :class:`ModelGraph` for one execution phase.
+
+    ``fused_attention=True`` (default) emits every attention score/context
+    stage as a fused ``attn_qk``/``attn_pv`` op pair over the batched
+    attention workloads (:func:`repro.core.workload.attention_qk` /
+    ``attention_pv``) with the head×batch axis as the batched ``b`` dim —
+    the paper's score-stationary fusion where P = softmax(S) stays resident
+    between the stages.  ``fused_attention=False`` keeps the historical
+    per-GEMM lowering (one GEMM row per head×batch); designs whose dataflow
+    set cannot map attention workloads fall back to it through
+    :func:`repro.frontend.lower.unfuse_attention_rows` — both forms carry
+    identical total MACs and PPU elements.
+    """
     if phase not in PHASES:
         raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
     if seq < 1 or batch < 1:
@@ -175,10 +189,20 @@ def build_model_graph(cfg: ModelConfig, *, seq: int = 512, batch: int = 1,
             si, srep = q_len, cfg.n_heads * batch
         else:  # decode: one query row per sequence, batched on i
             si, srep = batch, cfg.n_heads
-        add(stage, layer, "attn_scores", "gemm", dict(i=si, j=eff, k=hd),
-            rep * srep, nt=si * eff)                       # softmax on PPUs
-        add(stage, layer, "attn_context", "gemm", dict(i=si, j=hd, k=eff),
-            rep * srep)
+        if fused_attention:
+            # score-stationary fused pair (paper Fig. 10 "Attention"): the
+            # head×batch axis becomes the batched b dim, P = softmax(S) stays
+            # resident between the stages (no HBM round trip for scores)
+            add(stage, layer, "attn_scores", "attn_qk",
+                dict(b=srep, m=si, n=eff, d=hd), rep,
+                nt=srep * si * eff)                        # softmax on PPUs
+            add(stage, layer, "attn_context", "attn_pv",
+                dict(b=srep, m=si, n=eff, d=hd), rep)
+        else:
+            add(stage, layer, "attn_scores", "gemm", dict(i=si, j=eff, k=hd),
+                rep * srep, nt=si * eff)                   # softmax on PPUs
+            add(stage, layer, "attn_context", "gemm", dict(i=si, j=hd, k=eff),
+                rep * srep)
         add(stage, layer, "out_proj", "gemm",
             dict(i=n_tok, j=d, k=cfg.n_heads * hd), rep,
             nt=n_tok * d)                                  # residual + norm
@@ -262,10 +286,16 @@ def build_model_graph(cfg: ModelConfig, *, seq: int = 512, batch: int = 1,
                 dict(i=enc_toks, j=2 * cfg.n_kv_heads * hd, k=d), n_dec)
         si, srep = (S, cfg.n_heads * batch) if prefill else (batch,
                                                             cfg.n_heads)
-        add("decoder", "xattn", "cross_scores", "gemm",
-            dict(i=si, j=E, k=hd), n_dec * srep, nt=si * E)
-        add("decoder", "xattn", "cross_context", "gemm",
-            dict(i=si, j=hd, k=E), n_dec * srep)
+        if fused_attention:
+            add("decoder", "xattn", "cross_scores", "attn_qk",
+                dict(b=srep, m=si, n=E, d=hd), n_dec, nt=srep * si * E)
+            add("decoder", "xattn", "cross_context", "attn_pv",
+                dict(b=srep, m=si, n=E, d=hd), n_dec)
+        else:
+            add("decoder", "xattn", "cross_scores", "gemm",
+                dict(i=si, j=E, k=hd), n_dec * srep, nt=si * E)
+            add("decoder", "xattn", "cross_context", "gemm",
+                dict(i=si, j=hd, k=E), n_dec * srep)
         add("decoder", "xattn", "cross_out_proj", "gemm",
             dict(i=toks, j=d, k=cfg.n_heads * hd), n_dec, nt=toks * d)
 

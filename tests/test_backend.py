@@ -20,11 +20,12 @@ from repro.core.cost import dag_area_um2, dag_power_mw, design_area_mm2
 from repro.core.dag import DAG, codegen
 from repro.core.dataflow import build_dataflow
 from repro.core.emit import build_netlist, emit_netlist
-from repro.core.funcsim import oracle
+from repro.core.funcsim import oracle, simulate_stages, staged_oracle
 from repro.core.passes import (broadcast_rewire, delay_matching,
                                extract_reduction_trees, infer_bitwidths,
                                pin_reuse, power_gate, run_backend)
-from repro.core.rtlsim import RTLTimingError, simulate_rtl
+from repro.core.rtlsim import (RTLTimingError, simulate_rtl,
+                               simulate_rtl_stages)
 
 
 def gemm_jk_adg(P=4):
@@ -52,6 +53,33 @@ def fused_gemm_adg(P=4):
                          temporal=[("i", 2), ("j", 2), ("k", 8)],
                          c=(1, 1), name="gemm-ij")
     return generate_adg([(wl, df1), (wl, df2)], name="gemm-mj")
+
+
+def fused_attention_adg(P=4):
+    """The score-stationary two-*workload* design (paper Fig. 10
+    "Attention"): attn_qk and attn_pv share one (m, n) FU grid and agree on
+    the b/m/n extents so S hands over to P shape-exactly."""
+    qk, pv = W.attention_qk(), W.attention_pv()
+    df_qk = build_dataflow(qk, spatial=[("m", P), ("n", P)],
+                           temporal=[("b", 2), ("m", 2), ("n", 2), ("d", 4)],
+                           c=(0, 0), name="attn-qk")
+    df_pv = build_dataflow(pv, spatial=[("m", P), ("n", P)],
+                           temporal=[("b", 2), ("m", 2), ("n", 2), ("d", 4)],
+                           c=(0, 0), name="attn-pv")
+    return generate_adg([(qk, df_qk), (pv, df_pv)], name="attn-fused")
+
+
+def _attention_inputs(adg, seed=0):
+    r = np.random.default_rng(seed)
+    qk, pv = adg.spec("attn-qk"), adg.spec("attn-pv")
+    out = {}
+    for spec, names in ((qk, ("Q", "K")), (pv, ("V",))):
+        sizes = spec.dataflow.sizes()
+        for name in names:
+            shape = spec.workload.tensor_shape(spec.workload.tensor(name),
+                                               sizes)
+            out[name] = r.integers(-4, 5, size=shape).astype(np.float64)
+    return out
 
 
 class TestCodegen:
@@ -395,6 +423,92 @@ class TestRTLSim:
         wl = W.gemm()
         for s in adg.specs:
             _rtl_check(wl, s.dataflow, adg=adg)
+
+    def test_fused_attention_two_stage_matches_oracle(self):
+        """The paper-distinctive design point: one netlist executing the
+        QK then PV workloads with P held in the behavioral memory model,
+        bit-exact against the two-stage funcsim oracle — for the optimized
+        pipeline AND the Fig. 10 delay-matching-only baseline."""
+        adg = fused_attention_adg()
+        inputs = _attention_inputs(adg)
+        stages, resident = ["attn-qk", "attn-pv"], {"S": "P"}
+        refs = staged_oracle(adg, stages, inputs, resident=resident)
+        fsim = simulate_stages(adg, stages, inputs, resident=resident)
+        for f, ref in zip(fsim, refs):
+            np.testing.assert_array_equal(f.output, ref)
+        for optimize in (False, True):
+            dag = codegen(adg)
+            run_backend(dag, optimize=optimize)
+            res = simulate_rtl_stages(dag, adg, stages, inputs,
+                                      resident=resident)
+            for r, ref in zip(res, refs):
+                np.testing.assert_array_equal(r.output, ref)
+
+    def test_fused_attention_softmax_ppu_handover(self):
+        """Nontrivial PPU transform at the handover: P = softmax(S) is
+        applied by the testbench exactly as the staged oracle does."""
+        def softmax(s):
+            e = np.exp(s - s.max(axis=-1, keepdims=True))
+            return e / e.sum(axis=-1, keepdims=True)
+
+        adg = fused_attention_adg()
+        inputs = _attention_inputs(adg, seed=3)
+        stages, resident = ["attn-qk", "attn-pv"], {"S": "P"}
+        refs = staged_oracle(adg, stages, inputs, resident=resident,
+                             ppu=softmax)
+        dag = codegen(adg)
+        run_backend(dag)
+        res = simulate_rtl_stages(dag, adg, stages, inputs,
+                                  resident=resident, ppu=softmax)
+        for r, ref in zip(res, refs):
+            np.testing.assert_array_equal(r.output, ref)
+
+    def test_stage_driver_rejects_bad_inputs(self):
+        adg = fused_attention_adg()
+        inputs = _attention_inputs(adg)
+        dag = codegen(adg)
+        run_backend(dag)
+        # externally supplying the resident tensor is an error
+        bad = dict(inputs, P=np.zeros_like(inputs["V"]))
+        with pytest.raises(ValueError):
+            simulate_rtl_stages(dag, adg, ["attn-qk", "attn-pv"], bad,
+                                resident={"S": "P"})
+        # running PV without the QK handover must fail loudly, not fill P
+        with pytest.raises(KeyError):
+            simulate_rtl_stages(dag, adg, ["attn-pv"], inputs,
+                                resident={"S": "P"})
+
+    def test_mixed_arity_workload_fusion_rejected(self):
+        """The shared FU compute plane cannot serve a two-multiplier (mac2)
+        workload and a plain-MAC workload at once — codegen must reject the
+        combination instead of silently miswiring the 2-input stage."""
+        wl3, wl2 = W.mttkrp(), W.gemm()
+        df3 = build_dataflow(wl3, spatial=[("i", 4), ("j", 4)],
+                             temporal=[("k", 3), ("l", 3)],
+                             c=(0, 0), name="mttkrp-ij")
+        df2 = build_dataflow(wl2, spatial=[("i", 4), ("j", 4)],
+                             temporal=[("i", 2), ("j", 2), ("k", 8)],
+                             c=(0, 0), name="gemm-ij")
+        adg = generate_adg([(wl3, df3), (wl2, df2)], name="mixed")
+        with pytest.raises(NotImplementedError):
+            codegen(adg)
+
+    def test_fused_attention_netlist_has_workload_select(self):
+        """ctrl modules carry the workload-select field; the FU operand
+        muxes are driven by the shared wl_sel word, not packed selects."""
+        adg = fused_attention_adg()
+        dag = codegen(adg)
+        run_backend(dag)
+        v = emit_netlist(dag)
+        _assert_nets_declared(v)
+        assert "wl_o" in v and "wl_sel" in v
+        assert "assign wl_o = 1'd0;" in v  # attn-qk executes workload 0
+        assert "assign wl_o = 1'd1;" in v  # attn-pv executes workload 1
+        # homogeneous designs must NOT grow the field
+        adg2 = fused_gemm_adg()
+        dag2 = codegen(adg2)
+        run_backend(dag2)
+        assert "wl_o" not in emit_netlist(dag2)
 
     def test_corrupted_delay_matching_is_caught(self):
         wl = W.gemm()

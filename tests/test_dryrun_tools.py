@@ -12,6 +12,13 @@ from repro.launch.hloparse import analyze_hlo
 from repro.launch.roofline import Roofline
 
 
+def _xla_cost(comp) -> dict:
+    """Normalize Compiled.cost_analysis across JAX API drift: newer
+    releases return a one-element list of the properties dict."""
+    c = comp.cost_analysis()
+    return c[0] if isinstance(c, (list, tuple)) else c
+
+
 class TestHloParse:
     def test_matmul_matches_xla(self):
         M = N = K = 256
@@ -19,7 +26,7 @@ class TestHloParse:
             jax.ShapeDtypeStruct((M, K), jnp.float32),
             jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
         h = analyze_hlo(comp.as_text())
-        c = comp.cost_analysis()
+        c = _xla_cost(comp)
         assert h.flops == pytest.approx(c["flops"])
         assert h.flops == 2 * M * N * K
 
@@ -40,8 +47,11 @@ class TestHloParse:
         h = analyze_hlo(comp.as_text())
         assert h.flops == pytest.approx(2 * M ** 3 * trips)
         assert trips in h.trip_counts
-        # XLA's own accounting misses the trips — the reason the parser exists
-        assert comp.cost_analysis()["flops"] == pytest.approx(2 * M ** 3)
+        # XLA's own accounting misses the trips — the reason the parser
+        # exists (rel tolerance: newer XLA adds a few scalar loop-counter
+        # flops on top of the single-iteration matmul cost)
+        assert _xla_cost(comp)["flops"] == pytest.approx(2 * M ** 3,
+                                                         rel=1e-3)
 
     def test_nested_scan(self):
         M = 64

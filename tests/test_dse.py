@@ -196,18 +196,25 @@ class TestEvaluator:
 class TestLowering:
     def test_all_archs_lower(self):
         from repro.configs import ARCH_IDS
+        from repro.frontend import unfuse_attention_rows
         for name in ARCH_IDS:
             rows = lower_config(get_config(name, reduced=True), seq=32)
             assert rows, name
             for kind, dims, rep, nt in rows:
-                assert kind in ("gemm", "conv", "dwconv")
+                assert kind in ("gemm", "conv", "dwconv",
+                                "attn_qk", "attn_pv")
                 assert rep >= 1
                 assert all(v >= 1 for v in dims.values()), (name, dims)
+            # the plain-GEMM fallback of the fused attention pair stays
+            # available for non-fused designs and carries only classic kinds
+            for kind, *_ in unfuse_attention_rows(rows):
+                assert kind in ("gemm", "conv", "dwconv")
 
     def test_moe_scales_active_compute(self):
+        import math
         cfg = get_config("deepseek_moe_16b", reduced=True)
         rows = lower_config(cfg, seq=32)
-        macs = sum(rep * dims["i"] * dims["j"] * dims["k"]
+        macs = sum(rep * math.prod(dims.values())
                    for _, dims, rep, _ in rows)
         dense = get_config("glm4_9b", reduced=True)
         assert macs > 0 and dense is not None

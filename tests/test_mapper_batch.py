@@ -84,6 +84,8 @@ class TestScalarBatchParity:
             _assert_same_mapping(ms, mb, (wl.name, dims, obj))
 
     def test_tile_search_parity_and_no_regression(self):
+        """The default (tile-widened) space: scalar/batch parity over the
+        tiled candidates — the gate that let tile_search flip default-on."""
         rng = random.Random(7)
         for _ in range(10):
             wl, dims, sps, hw, dn, ppu, obj = _random_case(rng)
@@ -95,8 +97,9 @@ class TestScalarBatchParity:
                               engine="batch", tile_search=True)
             _assert_same_mapping(ms, mb, (wl.name, dims, "tile"))
             base = best_mapping(wl, dims, sps, hw, data_nodes_per_tensor=dn,
-                                ppu_elements=ppu, objective="cycles")
-            # tile_search only widens the space: never worse, and identical
+                                ppu_elements=ppu, objective="cycles",
+                                tile_search=False)
+            # tile search only widens the space: never worse, and identical
             # when no split wins (ties keep the earlier base candidate)
             assert mb.perf.cycles <= base.perf.cycles
 
@@ -133,12 +136,17 @@ class TestEnumeration:
         every factor pair to the same (n_fus,) candidate."""
         wl = W.gemm()
         sps = [SpatialChoice(("j",), (1,), "j1")]
-        cands = enumerate_candidates(wl, dict(i=64, j=512, k=64), sps, HW)
+        cands = enumerate_candidates(wl, dict(i=64, j=512, k=64), sps, HW,
+                                     tile_search=False)
         keys = [(c.spatial_idx, c.facs, c.temporal) for c in cands]
         assert len(keys) == len(set(keys))
         assert all(c.facs == (HW.n_fus,) for c in cands)
         # without dedup this would be ~len(factor_pairs) times larger
         assert len(cands) <= len(factor_pairs(HW.n_fus)) * 5
+        # the default (tiled) space dedups the same way
+        tiled = enumerate_candidates(wl, dict(i=64, j=512, k=64), sps, HW)
+        tkeys = [(c.spatial_idx, c.facs, c.temporal) for c in tiled]
+        assert len(tkeys) == len(set(tkeys))
 
     def test_batch_rows_match_candidates(self):
         wl = W.conv2d()
@@ -153,15 +161,22 @@ class TestEnumeration:
         pad = batch.loop_dim < 0
         assert (batch.loop_size[pad] == 1).all()
 
-    def test_tile_search_defaults_off(self):
+    def test_tile_search_defaults_on(self):
+        """Tile splits are part of the default candidate space; the opt-out
+        narrower space is a strict subset with base candidates first."""
         wl = W.gemm()
         dims = dict(i=512, j=512, k=512)
-        base = enumerate_candidates(wl, dims, GEMM_SP, HW)
-        tiled = enumerate_candidates(wl, dims, GEMM_SP, HW, tile_search=True)
+        base = enumerate_candidates(wl, dims, GEMM_SP, HW, tile_search=False)
+        tiled = enumerate_candidates(wl, dims, GEMM_SP, HW)
         assert len(tiled) > len(base)
         # base candidates come first within each (spatial, facs, order) group
         assert set((c.spatial_idx, c.facs, c.temporal) for c in base) <= \
             set((c.spatial_idx, c.facs, c.temporal) for c in tiled)
+        # default entry points agree with the explicit tile_search=True space
+        explicit = enumerate_candidates(wl, dims, GEMM_SP, HW,
+                                        tile_search=True)
+        assert [(c.spatial_idx, c.facs, c.temporal) for c in tiled] == \
+            [(c.spatial_idx, c.facs, c.temporal) for c in explicit]
 
 
 class TestKernelsAgainstScalar:

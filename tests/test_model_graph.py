@@ -13,7 +13,8 @@ from repro.frontend import (PHASES, build_model_graph, lower_model,
                             lower_zoo, merge_rows)
 from repro.models.common import BlockSpec, ModelConfig
 
-_WL = {"gemm": W.gemm(), "conv": W.conv2d(), "dwconv": W.depthwise_conv2d()}
+_WL = {"gemm": W.gemm(), "conv": W.conv2d(), "dwconv": W.depthwise_conv2d(),
+       "attn_qk": W.attention_qk(), "attn_pv": W.attention_pv()}
 
 
 def _row_macs(rows):
@@ -84,15 +85,45 @@ class TestGoldenDedup:
         "whisper_base":         ((20, 19), (11, 10)),  # encoder: prefill only
     }
 
+    # fused attention rows per phase: (attn_qk, attn_pv) dedup counts.
+    # Every attention-bearing config keeps the score-stationary op pair;
+    # rwkv6 is attention-free; whisper adds self- + cross-attention variants
+    # (encoder self-attention merges away in decode).
+    GOLDEN_ATTN = {
+        "jamba_1_5_large_398b": ((1, 1), (1, 1)),
+        "rwkv6_7b":             ((0, 0), (0, 0)),
+        "mistral_nemo_12b":     ((1, 1), (1, 1)),
+        "gemma_7b":             ((1, 1), (1, 1)),
+        "glm4_9b":              ((1, 1), (1, 1)),
+        "gemma2_9b":            ((1, 1), (1, 1)),
+        "llama4_scout_17b_a16e": ((1, 1), (1, 1)),
+        "deepseek_moe_16b":     ((1, 1), (1, 1)),
+        "phi_3_vision_4_2b":    ((1, 1), (1, 1)),
+        "whisper_base":         ((3, 3), (2, 2)),
+    }
+
     def test_golden_covers_zoo(self):
         assert set(self.GOLDEN) == set(ARCH_IDS)
+        assert set(self.GOLDEN_ATTN) == set(ARCH_IDS)
 
     @pytest.mark.parametrize("name", ARCH_IDS)
     def test_counts_stable(self, name):
         cfg = get_config(name)
-        for phase, want in zip(PHASES, self.GOLDEN[name]):
+        for phase, want, want_attn in zip(PHASES, self.GOLDEN[name],
+                                          self.GOLDEN_ATTN[name]):
             g = build_model_graph(cfg, seq=512, phase=phase)
-            assert (g.n_nodes, len(g.lowered())) == want, (name, phase)
+            rows = g.lowered()
+            assert (g.n_nodes, len(rows)) == want, (name, phase)
+            got_attn = (sum(1 for k, *_ in rows if k == "attn_qk"),
+                        sum(1 for k, *_ in rows if k == "attn_pv"))
+            assert got_attn == want_attn, (name, phase)
+            # each qk row pairs with a pv row of identical (dims, repeat):
+            # the contract apply_attention_fusion relies on
+            qk = {(tuple(sorted(d.items())), r) for k, d, r, _ in rows
+                  if k == "attn_qk"}
+            pv = {(tuple(sorted(d.items())), r) for k, d, r, _ in rows
+                  if k == "attn_pv"}
+            assert qk == pv, (name, phase)
 
 
 class TestFamilyFeatures:
@@ -124,17 +155,18 @@ class TestFamilyFeatures:
         assert stem.kind == "conv"
         assert stem.dims["oh"] == stem.dims["ow"] == 24  # 576 = 24x24
         scores = next(n for n in g.nodes if n.op == "attn_scores")
-        assert scores.dims["j"] == 64 + 576  # prefix extends the context
+        assert scores.kind == "attn_qk"
+        assert scores.dims["n"] == 64 + 576  # prefix extends the context
         # decode: no stem, but the prefix stays in the KV context
         gd = build_model_graph(cfg, seq=64, phase="decode")
         assert not [n for n in gd.nodes if n.op == "patch_embed"]
         assert next(n for n in gd.nodes
-                    if n.op == "attn_scores").dims["j"] == 64 + 576
+                    if n.op == "attn_scores").dims["n"] == 64 + 576
 
     def test_window_clamps_context(self):
         cfg = get_config("gemma2_9b")  # local 4096 / global alternation
         g = build_model_graph(cfg, seq=8192)
-        eff = sorted({n.dims["j"] for n in g.nodes if n.op == "attn_scores"})
+        eff = sorted({n.dims["n"] for n in g.nodes if n.op == "attn_scores"})
         assert eff == [4096, 8192]
 
     def test_encdec_cross_attention(self):
@@ -143,7 +175,9 @@ class TestFamilyFeatures:
         ops = g.ops()
         assert ops["audio_embed"] == 1 and ops["cross_scores"] == 1
         xs = next(n for n in g.nodes if n.op == "cross_scores")
-        assert xs.dims["j"] == 1500 and xs.repeat == 6 * cfg.n_heads
+        assert xs.kind == "attn_qk"
+        assert xs.dims["n"] == 1500 and xs.repeat == 6
+        assert xs.dims["b"] == cfg.n_heads  # heads ride the batched b dim
         enc = [n for n in g.nodes if n.stage == "encoder"]
         assert enc and all(n.repeat % cfg.n_enc_layers == 0 for n in enc)
         gd = build_model_graph(cfg, seq=64, phase="decode")
@@ -155,7 +189,8 @@ class TestFamilyFeatures:
                               phase="decode", lm_head=False)
         assert all(n.dims["i"] == 1 for n in g.nodes if n.kind == "gemm")
         scores = next(n for n in g.nodes if n.op == "attn_scores")
-        assert scores.dims["j"] == 512  # full context as reduction/free dim
+        assert scores.dims["m"] == 1   # one query row per sequence
+        assert scores.dims["n"] == 512  # full context as the score axis
 
 
 class TestHandListParity:
@@ -197,10 +232,12 @@ class TestHandListParity:
 
     def test_gemma_prefill_attention_shapes(self):
         """The old dse.evaluate hand formulas for a dense GQA-free block,
-        checked against the lowered Gemma graph."""
+        checked against the lowered Gemma graph (fallback per-GEMM
+        attention lowering — the fused pair is pinned in TestGoldenDedup
+        and TestFusedAttentionLowering)."""
         cfg = get_config("gemma_7b")
         seq, d, hd = 64, cfg.d_model, cfg.hd
-        got = _shapes(lower_model(cfg, seq=seq))
+        got = _shapes(lower_model(cfg, seq=seq, fused_attention=False))
         for dims in [
             dict(i=seq, j=(cfg.n_heads + 2 * cfg.n_kv_heads) * hd, k=d),
             dict(i=seq, j=seq, k=hd),           # scores
@@ -211,6 +248,44 @@ class TestHandListParity:
             dict(i=seq, j=cfg.vocab_size, k=d),  # LM head
         ]:
             assert ("gemm", tuple(sorted(dims.items()))) in got, dims
+
+
+class TestFusedAttentionLowering:
+    """Fused attn_qk/attn_pv pair ↔ plain-GEMM fallback contract."""
+
+    def test_unfuse_preserves_macs_and_ppu(self):
+        from repro.frontend import unfuse_attention_rows
+        for name in ARCH_IDS:
+            rows = lower_model(get_config(name), seq=128)
+            uf = unfuse_attention_rows(rows)
+            assert _row_macs(rows) == _row_macs(uf), name
+            nt = sum(r * n for _, _, r, n in rows)
+            nt_uf = sum(r * n for _, _, r, n in uf)
+            assert nt == pytest.approx(nt_uf), name
+            assert not any(k in ("attn_qk", "attn_pv") for k, *_ in uf)
+
+    def test_fused_matches_explicit_gemm_lowering(self):
+        """unfuse(fused lowering) must equal the fused_attention=False
+        lowering row-for-row — one contract, two entry points."""
+        from repro.frontend import unfuse_attention_rows
+        for name in ("gemma_7b", "whisper_base", "glm4_9b"):
+            cfg = get_config(name)
+            for phase in PHASES:
+                fused = lower_model(cfg, seq=96, phase=phase)
+                plain = lower_model(cfg, seq=96, phase=phase,
+                                    fused_attention=False)
+                assert _shapes(unfuse_attention_rows(fused)) == \
+                    _shapes(plain), (name, phase)
+
+    def test_fused_rows_are_workload_shaped(self):
+        rows = lower_model(get_config("glm4_9b"), seq=64)
+        qk = next(r for r in rows if r[0] == "attn_qk")
+        _, dims, rep, nt = qk
+        cfg = get_config("glm4_9b")
+        assert dims["b"] == cfg.n_heads      # heads on the batched b dim
+        assert dims["m"] == dims["n"] == 64  # score tile
+        assert dims["d"] == cfg.hd
+        assert nt == dims["b"] * dims["m"] * dims["n"]  # softmax elements
 
 
 class TestZooAndResolve:

@@ -238,12 +238,22 @@ class TestOptim:
 # sharding rules
 # ---------------------------------------------------------------------------
 
+def _abstract_mesh_2x2():
+    """AbstractMesh across JAX API drift: the container's JAX takes one
+    shape_tuple of (name, size) pairs; older releases took (shape, names)."""
+    import jax
+    try:
+        return jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
+    except TypeError:
+        return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+
+
 class TestShardingRules:
     def test_divisibility_fallback(self):
         import jax
         from jax.sharding import PartitionSpec as P
         from repro.parallel.sharding import logical_to_spec
-        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        mesh = _abstract_mesh_2x2()
         # divisible: sharded
         assert logical_to_spec(("tensor",), (8,), mesh) == P("model")
         # not divisible: replicated
@@ -255,7 +265,7 @@ class TestShardingRules:
     def test_param_rules_cover_all_archs(self):
         from repro.models import transformer as TF
         from repro.parallel.sharding import shard_params_spec
-        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        mesh = _abstract_mesh_2x2()
         for arch in ("jamba_1_5_large_398b", "rwkv6_7b", "deepseek_moe_16b"):
             cfg = get_config(arch, reduced=True)
             shapes = jax.eval_shape(
