@@ -48,6 +48,8 @@ from repro.dse import (Evaluator, MappingCache, SPACES, format_frontier,
                        write_bench_json, write_models_json)
 from repro.dse.evaluate import DEFAULT_ZOO
 from repro.frontend import PHASES
+from repro.obs import (add_verbosity_flag, configure, enable_tracing,
+                       save_trace, set_metrics_enabled)
 
 
 def emit_frontier_rtl(result, out_dir: str) -> dict:
@@ -137,8 +139,20 @@ def main(argv=None) -> int:
                     help="disable the persistent mapping cache")
     ap.add_argument("--top", type=int, default=12,
                     help="scorecard rows to print")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome trace-event JSON of the sweep "
+                         "(load in https://ui.perfetto.dev or "
+                         "chrome://tracing); covers process-pool workers")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="disable the hot-path metrics registry (the bench "
+                         "JSON 'metrics' section comes out empty)")
     ap.add_argument("-q", "--quiet", action="store_true")
+    add_verbosity_flag(ap)
     args = ap.parse_args(argv)
+    configure(args.verbose)
+    set_metrics_enabled(not args.no_metrics)
+    if args.trace:
+        enable_tracing()
 
     t0 = time.perf_counter()
     space = SPACES[args.space or ("tiny" if args.quick else "small")]
@@ -242,6 +256,10 @@ def main(argv=None) -> int:
                           artifacts=artifacts)
     else:
         write_bench_json(out, result, meta=meta, artifacts=artifacts)
+    if args.trace:
+        payload = save_trace(args.trace)
+        print(f"  trace: {len(payload['traceEvents'])} events -> "
+              f"{args.trace}")
     cs = result.cache_stats
     print(f"\nswept {result.n_designs} designs x {len(zoo)} configs in "
           f"{wall:.1f}s (workers={args.workers}; mapper cache: "

@@ -41,6 +41,8 @@ from repro.core.emit import build_netlist
 from repro.core.passes import run_backend
 from repro.dse import DesignPoint, Evaluator, MappingCache
 from repro.frontend import build_model_graph
+from repro.obs import (add_verbosity_flag, configure, enable_tracing,
+                       save_trace, span)
 
 
 def emit_rtl(dag, path: str) -> None:
@@ -70,7 +72,8 @@ def pick_dse_design(path: str, objective: str) -> DesignPoint:
                        dataflow_set=d["dataflow_set"])
 
 
-def run_paper_design(net: str, emit: str | None = None) -> None:
+def run_paper_design(net: str, emit: str | None = None,
+                     vcd: str | None = None) -> None:
     """The original Fig. 11/12 miniature: LEGO-MNICOC at 256 FUs."""
     t0 = time.time()
     print("== generating LEGO-MNICOC (256 FUs, fused OH-OW + IC-OC) ==")
@@ -81,6 +84,8 @@ def run_paper_design(net: str, emit: str | None = None) -> None:
           f"(paper: 28.7s at 256 FUs)")
     if emit:
         emit_rtl(dag, emit)
+    if vcd:
+        dump_waveform(dag, adg, vcd)
     banks = sum(b.total_banks for b in adg.banking.values())
     area = design_area_mm2(dag, 256 * 1024, banks)
     power = design_power_mw(dag, 256 * 1024, sram_bytes_per_cycle=64)
@@ -100,7 +105,7 @@ def run_paper_design(net: str, emit: str | None = None) -> None:
 
 
 def run_dse_design(point: DesignPoint, net: str, pick: str,
-                   emit: str | None = None) -> None:
+                   emit: str | None = None, vcd: str | None = None) -> None:
     """Score a DSE-picked design on ``net`` the way the sweep scored it:
     its own dataflow set, √N data-node estimate, closed-form area/power."""
     print(f"== DSE pick (min {pick}): {point.name} ==")
@@ -118,6 +123,8 @@ def run_dse_design(point: DesignPoint, net: str, pick: str,
           f"(paper: 28.7s at 256 FUs)")
     if emit:
         emit_rtl(dag, emit)
+    if vcd:
+        dump_waveform(dag, adg, vcd)
 
     e = Evaluator(zoo={net: NETWORKS[net]()},
                   cache=MappingCache()).evaluate(point)
@@ -131,7 +138,25 @@ def run_dse_design(point: DesignPoint, net: str, pick: str,
           f"energy saving {gem.energy_pj/e.energy_pj:.2f}x")
 
 
-def verify_two_stage_rtl(dag, adg) -> None:
+def dump_waveform(dag, adg, path: str) -> None:
+    """Smoke-run the generated design's first dataflow with random inputs
+    and dump every node's value stream as a VCD waveform (GTKWave /
+    Surfer / any IEEE-1364 viewer)."""
+    import numpy as np
+
+    from repro.core.rtlsim import simulate_rtl
+
+    df_name = adg.dataflow_names[0]
+    spec = adg.spec(df_name)
+    sizes = spec.dataflow.sizes()
+    rng = np.random.default_rng(0)
+    inputs = {t.name: rng.integers(-3, 4, size=spec.workload.tensor_shape(
+        t, sizes)).astype(float) for t in spec.workload.inputs}
+    res = simulate_rtl(dag, adg, df_name, inputs, vcd=path)
+    print(f"  vcd: {res.cycles}-cycle {df_name!r} waveform -> {path}")
+
+
+def verify_two_stage_rtl(dag, adg, vcd: str | None = None) -> None:
     """Bit-exactness gate for the score-stationary fused attention design:
     the emitted netlist executes the QK stage, the score tensor S is held
     in the behavioral memory model, softmax runs as the PPU transform, and
@@ -159,17 +184,20 @@ def verify_two_stage_rtl(dag, adg) -> None:
     stages, resident = ["attn-qk", "attn-pv"], {"S": "P"}
     refs = staged_oracle(adg, stages, inputs, resident=resident, ppu=softmax)
     res = simulate_rtl_stages(dag, adg, stages, inputs, resident=resident,
-                              ppu=softmax)
+                              ppu=softmax, vcd_path=vcd)
     for r, ref, name in zip(res, refs, stages):
         assert np.array_equal(r.output, ref), \
             f"stage {name}: netlist diverges from the funcsim oracle"
     print(f"  rtlsim two-stage check: QK + PV bit-exact vs funcsim oracle "
           f"(P resident, softmax on PPUs; "
           f"{res[0].cycles}+{res[1].cycles} cycles)")
+    if vcd:
+        print(f"  vcd: QK+PV two-stage waveform -> {vcd}")
 
 
 def run_model_design(model_id: str, seq: int, emit: str | None = None,
-                     point: DesignPoint | None = None) -> None:
+                     point: DesignPoint | None = None,
+                     vcd: str | None = None) -> None:
     """One generated architecture, one foundation model, both phases.
 
     Lowers the full config through the model-graph frontend, generates the
@@ -205,7 +233,9 @@ def run_model_design(model_id: str, seq: int, emit: str | None = None,
     print(f"  generation time: {time.time()-t0:.1f}s "
           f"(paper: 28.7s at 256 FUs)")
     if point.dataflow_set == "attention_fused":
-        verify_two_stage_rtl(dag, adg)
+        verify_two_stage_rtl(dag, adg, vcd=vcd)
+    elif vcd:
+        dump_waveform(dag, adg, vcd)
     if emit:
         emit_rtl(dag, emit)
 
@@ -244,10 +274,23 @@ def main():
     ap.add_argument("--emit-rtl", default=None, metavar="OUT.v",
                     help="write the generated design as structural Verilog "
                          "(datapath + per-dataflow control + df_sel top)")
+    ap.add_argument("--vcd", default=None, metavar="OUT.vcd",
+                    help="dump the rtlsim waveform of the generated design "
+                         "as a GTKWave-loadable VCD (the two-stage fused-"
+                         "attention verify with --model on attention "
+                         "models, else a smoke run of its first dataflow)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome trace-event JSON of the generate/"
+                         "verify/map pipeline (load in "
+                         "https://ui.perfetto.dev)")
     ap.add_argument("--dry-run", action="store_true",
                     help="validate arguments and inputs, print the plan, "
                          "exit before generation/mapping")
+    add_verbosity_flag(ap)
     args = ap.parse_args()
+    configure(args.verbose)
+    if args.trace:
+        enable_tracing()
 
     model_id = None
     if args.model:
@@ -272,14 +315,21 @@ def main():
                  else ""))
         return
 
-    if model_id:
-        point = pick_dse_design(args.dse, args.pick) if args.dse else None
-        run_model_design(model_id, args.seq, emit=args.emit_rtl, point=point)
-    elif args.dse:
-        run_dse_design(pick_dse_design(args.dse, args.pick), args.net,
-                       args.pick, emit=args.emit_rtl)
-    else:
-        run_paper_design(args.net, emit=args.emit_rtl)
+    with span("generate_accelerator", cat="cli",
+              target=model_id or args.net):
+        if model_id:
+            point = pick_dse_design(args.dse, args.pick) if args.dse else None
+            run_model_design(model_id, args.seq, emit=args.emit_rtl,
+                             point=point, vcd=args.vcd)
+        elif args.dse:
+            run_dse_design(pick_dse_design(args.dse, args.pick), args.net,
+                           args.pick, emit=args.emit_rtl, vcd=args.vcd)
+        else:
+            run_paper_design(args.net, emit=args.emit_rtl, vcd=args.vcd)
+    if args.trace:
+        payload = save_trace(args.trace)
+        print(f"  trace: {len(payload['traceEvents'])} events -> "
+              f"{args.trace}")
 
 
 if __name__ == "__main__":

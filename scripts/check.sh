@@ -97,9 +97,10 @@ echo
 echo "== cross-model sweep budget: --models all --quick under 60s =="
 start=$SECONDS
 python benchmarks/dse.py --models all --quick -q \
+    --trace "$tmp/trace.json" \
     --out "$tmp/BENCH_models.json" --cache-path "$tmp/models_cache.json"
 elapsed=$((SECONDS - start))
-python - "$tmp/BENCH_models.json" <<'PY'
+python - "$tmp/BENCH_models.json" "$tmp/trace.json" <<'PY'
 import json, sys
 p = json.load(open(sys.argv[1]))
 assert len(p["model_ids"]) == 10 and p["winner"]["design"]["name"], \
@@ -123,6 +124,30 @@ print(f"BENCH_models.json OK: {len(p['model_ids'])} models, "
       f"({p['winner']['metric']}={p['winner']['score']:.2f}); "
       f"fused attention evaluated, winner_uses={fa['winner_uses']}, "
       f"{len(fa['speedup_vs_unfused'])} configs with fused speedup")
+# observability gate: every bench artifact ships schema-versioned
+# provenance and the hot-path metrics snapshot (docs/OBSERVABILITY.md)
+prov, met = p["provenance"], p["metrics"]
+assert prov["schema"] >= 1 and prov["timestamp_utc"], "provenance incomplete"
+assert prov["argv"], "provenance must capture the CLI argv"
+assert set(met) == {"counters", "gauges", "histograms"}, "metrics sections"
+n = p["n_designs"]
+assert met["counters"].get("dse.designs_scored") == n, \
+    f"metrics: expected {n} designs scored, got {met['counters']}"
+assert met["counters"].get("mapper_cache.misses", 0) > 0, \
+    "metrics: mapping cache never consulted?"
+# --trace must produce a Perfetto-loadable Chrome trace covering the sweep
+t = json.load(open(sys.argv[2]))
+evs = t["traceEvents"]
+assert isinstance(evs, list) and evs, "empty traceEvents"
+spans = [e for e in evs if e.get("ph") == "X"]
+assert all({"name", "ts", "dur", "pid", "tid"} <= set(e) for e in spans)
+names = {e["name"] for e in spans}
+assert "dse.exhaustive_search" in names or \
+    "dse.evolutionary_search" in names, f"no sweep span in {sorted(names)}"
+assert sum(e["name"] == "dse.evaluate" for e in spans) == n, \
+    "one dse.evaluate span per design expected"
+print(f"observability OK: provenance schema {prov['schema']}, "
+      f"{len(met['counters'])} counters, {len(evs)} trace events")
 PY
 if [ "$elapsed" -ge 60 ]; then
     echo "--models all --quick took ${elapsed}s (budget 60s)" >&2

@@ -30,6 +30,8 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from repro.obs import METRICS
+
 from .dataflow import Dataflow
 from .interconnect import Reuse, build_reuse_graph
 from .spanning import spanning_interconnect
@@ -426,6 +428,7 @@ def apply_attention_fusion(layers, perfs, hw) -> int:
             perfs[idx] = _apply_dram_credit(perfs[idx],
                                             n_el * hw.data_bytes, hw)
             fused += 1
+    METRICS.counter("fusion.attention_pairs_fused").inc(fused)
     return fused
 
 

@@ -30,6 +30,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs import METRICS
+
 from .dataflow import Dataflow, build_dataflow
 from .perf_model import HWConfig, LayerPerf, layer_perf
 from .workload import Workload
@@ -161,10 +163,13 @@ def enumerate_candidates(
     orders = _orders(list(wl.iter_dims), wl)
     out: list[Candidate] = []
     seen: set[tuple] = set()
+    n_dup = 0
 
     def add(cand: Candidate) -> bool:
+        nonlocal n_dup
         key = (cand.spatial_idx, cand.facs, cand.temporal)
         if key in seen:
+            n_dup += 1
             return False
         seen.add(key)
         out.append(cand)
@@ -195,6 +200,10 @@ def enumerate_candidates(
                 if add(Candidate(si, facs, temporal)) and tile_search:
                     for split in _tile_splits(temporal):
                         add(Candidate(si, facs, split))
+    # pruned = duplicate (spatial, facs, temporal) keys dropped by dedup —
+    # the "candidates enumerated vs pruned" ratio in the bench metrics
+    METRICS.counter("mapper.candidates_enumerated").inc(len(out))
+    METRICS.counter("mapper.candidates_pruned").inc(n_dup)
     return out
 
 

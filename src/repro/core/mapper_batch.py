@@ -24,6 +24,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs import METRICS
+
 from .mapper import (Candidate, Mapping, SpatialChoice, enumerate_candidates,
                      materialize)
 from .perf_model import NO_TRUE_SIZE, HWConfig, LayerPerf, perf_kernel
@@ -169,6 +171,9 @@ def best_mappings(
     batch = build_batch(wl, dims_list, spatials, hw, tile_search=tile_search)
     r = evaluate_batch(batch, hw, dims_list, ppu_list,
                        data_nodes_per_tensor=data_nodes_per_tensor)
+    METRICS.counter("mapper.batch_solves").inc()
+    METRICS.counter("mapper.layers_solved").inc(len(queries))
+    METRICS.counter("mapper.candidates_scored").inc(batch.n_candidates)
     out: list[Mapping] = []
     for li in range(len(queries)):
         lo, hi = int(batch.offsets[li]), int(batch.offsets[li + 1])

@@ -27,6 +27,8 @@ import numpy as np
 import scipy.optimize as sopt
 import scipy.sparse as sp
 
+from repro.obs import METRICS
+
 from .dag import DAG, DAGEdge
 
 __all__ = [
@@ -131,6 +133,9 @@ def delay_matching(dag: DAG, broadcast_virtual_cost: bool = False) -> DelayMatch
                     add_row([(lv, 1.0), (lu, -1.0)], float(cap - dl + Lv))
 
     A = sp.csr_matrix((vals, (rows, cols)), shape=(len(b), n_var))
+    METRICS.counter("backend.lp_solves").inc()
+    METRICS.counter("backend.lp_rows").inc(len(b))
+    METRICS.counter("backend.lp_vars").inc(n_var)
     res = sopt.linprog(c, A_ub=A, b_ub=np.array(b),
                        bounds=[(0, None)] * n_var, method="highs")
     if not res.success:
@@ -144,6 +149,7 @@ def delay_matching(dag: DAG, broadcast_virtual_cost: bool = False) -> DelayMatch
         assert e.el >= -1e-6
         total_bits += e.el * e.bits
     dag.sched = D
+    METRICS.gauge("backend.register_bits").set(int(total_bits))
     return DelayMatchResult(int(total_bits), D)
 
 

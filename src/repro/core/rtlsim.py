@@ -33,9 +33,11 @@ accumulator / reduction-tree plane still executes cycle-by-cycle.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.obs import METRICS, VCDWriter, span
 
 from .adg import ADG
 from .dag import DAG
@@ -58,6 +60,8 @@ class RTLSimResult:
     mem_reads: dict[str, int]
     link_transfers: dict[str, int]
     checks: dict                # joins verified, fifo delays, overrides
+    hw: dict = field(default_factory=dict)  # introspection: per-FU
+    # utilization, stall attribution, FIFO occupancy (see _introspect)
 
 
 def _active(users: set[str], df_name: str) -> bool:
@@ -193,12 +197,22 @@ def _schedule(dag: DAG) -> tuple[dict[int, int], dict]:
 
 
 def simulate_rtl(dag: DAG, adg: ADG, df_name: str,
-                 inputs: dict[str, np.ndarray]) -> RTLSimResult:
+                 inputs: dict[str, np.ndarray],
+                 true_sizes: dict[str, int] | None = None,
+                 vcd: VCDWriter | str | None = None) -> RTLSimResult:
     """Execute the emitted netlist under dataflow ``df_name``.
 
     ``dag`` must come from :func:`repro.core.dag.codegen` (it carries the
     operand-port provenance) and be delay-matched — run
     :func:`repro.core.passes.run_backend` (or ``delay_matching``) first.
+
+    ``true_sizes`` gives the un-padded problem dims: per-FU utilization in
+    the ``hw`` introspection record then counts only iteration points inside
+    the true extents as useful work, matching
+    :func:`repro.core.perf_model.layer_perf` utilization accounting exactly.
+    ``vcd`` dumps every node's value stream as a waveform — pass a path
+    string (written on return) or a shared :class:`~repro.obs.VCDWriter`
+    (multi-stage runs; the caller saves).
     """
     if not dag.opnd_ports:
         raise ValueError("DAG carries no operand-port provenance; "
@@ -393,14 +407,96 @@ def simulate_rtl(dag: DAG, adg: ADG, df_name: str,
         for t in wl.inputs}
     checks["fifos"] = fifo_report
     checks["overridden_ports"] = sum(len(v) for v in overrides.values())
+
+    hw = _introspect(wl, df, S, T, W_total, n, i_base_all, SC, fill_mask,
+                     dag, true_sizes, fifo_report)
+    METRICS.counter("rtlsim.runs").inc()
+    METRICS.histogram("rtlsim.cycles").observe(W_total)
+
+    if vcd is not None:
+        writer = VCDWriter(vcd, design=f"{dag.name}.{df_name}") \
+            if isinstance(vcd, (str, bytes)) else vcd
+        _dump_vcd(writer, dag, streams)
+        if isinstance(vcd, (str, bytes)):
+            writer.save()
+
     return RTLSimResult(out, W_total, max(S.values()), fills, mem_reads,
-                        link_transfers, checks)
+                        link_transfers, checks, hw)
+
+
+def _introspect(wl, df, S, T, W_total, n, i_base_all, SC, fill_mask, dag,
+                true_sizes, fifo_report) -> dict:
+    """Hardware introspection record of one netlist execution.
+
+    * ``fu_utilization`` — useful-MAC cycles / active cycles per FU.  A
+      cycle is *useful* when the FU's iteration vector lies inside the true
+      (un-padded) problem extents; without ``true_sizes`` every cycle
+      counts, so the aggregate equals the closed-form
+      ``perf_model`` utilization (``true_macs / padded_macs``) by
+      construction — the parity the observability tests assert.
+    * ``stalls`` — wall FU-cycles not doing useful work, attributed:
+      ``fill`` (schedule offset before an FU's compute window — systolic
+      pipeline fill), ``drain`` (after the window), ``switch_fill``
+      (operand cycles served by the data-distribution switch instead of a
+      link — boundary fills; these overlap the active window),
+      ``padding`` (in-window cycles on padded iteration points) and
+      ``memory`` (always 0 today: the behavioral memory model answers every
+      address in one cycle; the slot is reserved for Verilator-calibrated
+      co-simulation).
+    * ``fifo_occupancy`` — steady-state occupancy (== programmed delay) vs
+      capacity per elastic FIFO; the high-water mark of the run.
+    """
+    sizes = df.sizes()
+    useful = np.ones((T, n), dtype=bool)
+    if true_sizes:
+        true_vec = np.array([true_sizes.get(d, sizes[d])
+                             for d in wl.iter_dims], dtype=np.int64)
+        for f in range(n):
+            useful[:, f] = np.all(i_base_all + SC[f] < true_vec, axis=1)
+    fu_busy = np.array([S[dag.fu_product[f]] for f in range(n)],
+                       dtype=np.int64)
+    useful_per_fu = useful.sum(axis=0)
+    switch_cycles = np.zeros(n, dtype=np.int64)
+    for m in fill_mask.values():
+        switch_cycles += m.sum(axis=0)
+    return {
+        "n_fus": int(n),
+        "active_cycles": int(T),
+        "total_cycles": int(W_total),
+        "utilization": float(useful.mean()),
+        "fu_utilization": (useful_per_fu / float(T)).tolist(),
+        "occupancy": float(T) / float(W_total),
+        "stalls": {
+            "fill": int(fu_busy.sum()),
+            "drain": int((W_total - T - fu_busy).sum()),
+            "switch_fill": int(switch_cycles.sum()),
+            "padding": int((T - useful_per_fu).sum()),
+            "memory": 0,
+        },
+        "fifo_occupancy": {
+            str(nid): {"high_water": rep["delay"],
+                       "capacity": rep["capacity"]}
+            for nid, rep in sorted(fifo_report.items())},
+    }
+
+
+def _dump_vcd(writer: VCDWriter, dag: DAG, streams: dict) -> None:
+    """Register every DAG node's value stream with the VCD writer (change-
+    compressed), in node-id order so the dump is deterministic."""
+    for nid in sorted(streams):
+        node = dag.nodes[nid]
+        name = f"n{nid}_{node.kind}"
+        if node.kind == "memport":
+            name += f"_{node.meta.get('tensor', '')}" \
+                    f"_{node.meta.get('direction', '')}"
+        writer.dump_stream(name, streams[nid])
 
 
 def simulate_rtl_stages(dag: DAG, adg: ADG, df_names: list[str],
                         inputs: dict[str, np.ndarray],
                         resident: dict[str, str] | None = None,
-                        ppu=None) -> list[RTLSimResult]:
+                        ppu=None,
+                        vcd_path: str | None = None) -> list[RTLSimResult]:
     """Execute a multi-*workload* schedule on one emitted netlist.
 
     ``df_names`` runs in order (the runtime re-programs ``df_sel`` /
@@ -420,13 +516,28 @@ def simulate_rtl_stages(dag: DAG, adg: ADG, df_names: list[str],
     extents (:func:`repro.core.funcsim.run_stages` — the same driver the
     staged funcsim oracle uses, so both sides enforce identical stage
     contracts).  Returns one :class:`RTLSimResult` per stage.
+
+    ``vcd_path`` dumps every stage's node value streams into **one** VCD
+    file on a monotonic timeline (the writer's origin advances past each
+    finished stage), so a two-stage fused-attention run opens in GTKWave as
+    a single waveform.
     """
     from .funcsim import run_stages
 
-    def stage_fn(a: ADG, dfn: str, stage_in):
-        return simulate_rtl(dag, a, dfn, stage_in)
+    writer = (VCDWriter(vcd_path, design=dag.name)
+              if vcd_path else None)
 
-    return run_stages(adg, df_names, inputs, resident, ppu, stage_fn)
+    def stage_fn(a: ADG, dfn: str, stage_in):
+        with span("rtlsim.stage", cat="rtlsim", dataflow=dfn):
+            res = simulate_rtl(dag, a, dfn, stage_in, vcd=writer)
+        if writer is not None:
+            writer.advance(res.cycles)
+        return res
+
+    out = run_stages(adg, df_names, inputs, resident, ppu, stage_fn)
+    if writer is not None:
+        writer.save()
+    return out
 
 
 def _time_vectors(T: int, R_T: np.ndarray) -> np.ndarray:

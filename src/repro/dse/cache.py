@@ -26,6 +26,7 @@ from repro.core.mapper import Mapping, SpatialChoice, best_mapping
 from repro.core.mapper_batch import best_mappings
 from repro.core.perf_model import HWConfig, LayerPerf
 from repro.core.workload import Workload
+from repro.obs import METRICS
 
 __all__ = ["MappingCache", "mapping_key", "atomic_write_json"]
 
@@ -115,8 +116,10 @@ class MappingCache:
         e = self._store.get(key)
         if e is None:
             self.misses += 1
+            METRICS.counter("mapper_cache.misses").inc()
         else:
             self.hits += 1
+            METRICS.counter("mapper_cache.hits").inc()
         return e
 
     def put(self, key: str, value: dict) -> None:

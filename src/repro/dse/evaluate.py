@@ -42,6 +42,7 @@ from repro.frontend import (has_attention_rows, lower_model,
                             unfuse_attention_rows)
 from repro.frontend import lower_zoo as _frontend_lower_zoo
 from repro.models.common import ModelConfig
+from repro.obs import METRICS, span
 
 from .cache import MappingCache
 from .space import DesignPoint
@@ -175,9 +176,16 @@ class Evaluator:
         return out
 
     def evaluate(self, point: DesignPoint) -> DesignEval:
+        with span("dse.evaluate", cat="dse", design=point.name):
+            return self._evaluate(point)
+
+    def _evaluate(self, point: DesignPoint) -> DesignEval:
         hw = point.hw_config()
         fused = (point.supports("attention_qk")
                  and point.supports("attention_pv"))
+        METRICS.counter("dse.designs_scored").inc()
+        METRICS.counter("dse.designs_fused_capable" if fused
+                        else "dse.designs_unfused").inc()
         zoo_layers = self._zoo_layers(fused)
         # all cache-missing layer shapes of a workload kind solve in a
         # single batched query through the persistent mapping cache

@@ -6,12 +6,28 @@ from __future__ import annotations
 
 import math
 
+from repro.obs import METRICS, provenance_record
+
 from .cache import atomic_write_json
 from .evaluate import DesignEval
 from .search import SearchResult
 
 __all__ = ["format_scorecard", "format_frontier", "write_bench_json",
            "cross_model_winner", "format_models", "write_models_json"]
+
+
+def _observability_sections(metrics: dict | None,
+                            provenance: dict | None) -> dict:
+    """The ``metrics`` + ``provenance`` sections every bench artifact
+    carries: run metadata (schema version, UTC timestamp, git sha, host,
+    argv — :func:`repro.obs.provenance_record`) and the hot-path counter
+    snapshot, so the bench trajectory across PRs is reconstructable and
+    every number ships with its pipeline statistics."""
+    return {
+        "provenance": (provenance_record() if provenance is None
+                       else provenance),
+        "metrics": METRICS.snapshot() if metrics is None else metrics,
+    }
 
 
 def _row(e: DesignEval) -> str:
@@ -110,7 +126,9 @@ def write_models_json(path: str, result: SearchResult,
                       model_ids: list[str],
                       baselines: dict[str, dict] | None = None,
                       meta: dict | None = None,
-                      artifacts: dict | None = None) -> dict:
+                      artifacts: dict | None = None,
+                      metrics: dict | None = None,
+                      provenance: dict | None = None) -> dict:
     """Dump the cross-model study to ``BENCH_models.json`` (atomic write).
 
     The payload carries per-model perf for every zoo entry of every design,
@@ -152,6 +170,7 @@ def write_models_json(path: str, result: SearchResult,
         "wall_s": result.wall_s,
         "cache": result.cache_stats,
         "meta": meta or {},
+        **_observability_sections(metrics, provenance),
         "model_ids": model_ids,
         "baseline": baselines or {},
         "artifacts": artifacts or {},
@@ -178,13 +197,17 @@ def write_models_json(path: str, result: SearchResult,
 
 def write_bench_json(path: str, result: SearchResult,
                      meta: dict | None = None,
-                     artifacts: dict | None = None) -> dict:
+                     artifacts: dict | None = None,
+                     metrics: dict | None = None,
+                     provenance: dict | None = None) -> dict:
     """Dump the sweep to ``BENCH_dse.json`` (atomic write); returns payload.
 
     ``artifacts`` maps a dataflow set (``os``/``ws``/``switch``) to an
     emitted Verilog netlist path (``benchmarks/dse.py --emit-dir``); each
     frontier entry gains an ``rtl`` key pointing at the netlist of its
-    wiring class."""
+    wiring class.  ``metrics``/``provenance`` override the default
+    observability sections (global registry snapshot + a fresh
+    :func:`repro.obs.provenance_record`)."""
     def entry(e: DesignEval) -> dict:
         d = e.as_dict()
         if artifacts:
@@ -201,6 +224,7 @@ def write_bench_json(path: str, result: SearchResult,
         "wall_s": result.wall_s,
         "cache": result.cache_stats,
         "meta": meta or {},
+        **_observability_sections(metrics, provenance),
         "artifacts": artifacts or {},
         "frontier": [entry(e) for e in result.frontier],
         "designs": [entry(e) for e in result.evals],

@@ -12,6 +12,12 @@ parent's entries) and results return **in submission order**, so the sweep
 is deterministic — the frontier is independent of the worker count.  New
 mapping-cache entries computed by workers merge back into the parent cache
 on join, so a later ``cache.save()`` persists them.
+
+Observability: each search runs inside a :func:`repro.obs.span` (the single
+source of the reported ``wall_s``, and a trace event when tracing is on),
+and workers ship their buffered trace events and metric deltas back with
+every result — the parent merges them, so one ``--trace`` file and one
+``metrics`` section cover the whole pool regardless of the worker count.
 """
 
 from __future__ import annotations
@@ -19,9 +25,14 @@ from __future__ import annotations
 import multiprocessing
 import random
 import sys
-import time
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
+
+from repro.obs import (METRICS, disable_tracing, drain_events,
+                       enable_tracing, get_logger, merge_events, span,
+                       tracing_enabled)
+
+_LOG = get_logger("dse.search")
 
 from .cache import MappingCache
 from .evaluate import DesignEval, Evaluator
@@ -92,9 +103,17 @@ class SearchResult:
 _WORKER: dict = {}
 
 
-def _init_worker(zoo, objective, warm_entries, baseline=None):
+def _init_worker(zoo, objective, warm_entries, baseline=None,
+                 trace: bool = False):
     """Build this worker's Evaluator around a private in-memory mapping
-    cache, warm-started with the parent's entries."""
+    cache, warm-started with the parent's entries.
+
+    Observability state is reset first: a forked worker inherits the
+    parent's trace buffer and metric totals, which would double-count on
+    merge.  Tracing is re-enabled iff the parent traced."""
+    drain_events()
+    METRICS.reset()
+    enable_tracing() if trace else disable_tracing()
     cache = MappingCache()
     cache.merge(warm_entries)  # merge bypasses the put() journal, so the
     _WORKER["ev"] = Evaluator(  # warm entries never echo back to the parent
@@ -106,7 +125,8 @@ def _worker_eval(point: DesignPoint):
     h0, m0 = ev.cache.hits, ev.cache.misses
     e = ev.evaluate(point)
     return (e, ev.cache.drain_new(),
-            ev.cache.hits - h0, ev.cache.misses - m0)
+            ev.cache.hits - h0, ev.cache.misses - m0,
+            drain_events(), METRICS.drain())
 
 
 class _PointEvaluator:
@@ -128,7 +148,8 @@ class _PointEvaluator:
                 initializer=_init_worker,
                 initargs=(evaluator.zoo, evaluator.objective,
                           evaluator.cache.snapshot(),
-                          getattr(evaluator, "baseline", None)))
+                          getattr(evaluator, "baseline", None),
+                          tracing_enabled()))
 
     def map(self, points: list[DesignPoint], log=None) -> list[DesignEval]:
         if self._pool is None:
@@ -141,11 +162,13 @@ class _PointEvaluator:
         cache = self.evaluator.cache
         chunk = max(1, len(points) // (self.workers * 4))
         out = []
-        for i, (e, new, dh, dm) in enumerate(
+        for i, (e, new, dh, dm, events, metrics) in enumerate(
                 self._pool.map(_worker_eval, points, chunksize=chunk)):
             cache.merge(new)
             cache.hits += dh
             cache.misses += dm
+            merge_events(events)
+            METRICS.merge(metrics)
             out.append(e)
             if log:
                 log(f"[{i + 1}/{len(points)}] {points[i].name}")
@@ -165,13 +188,18 @@ class _PointEvaluator:
 
 def exhaustive_search(space: DesignSpace, evaluator: Evaluator,
                       log=None, workers: int = 1) -> SearchResult:
-    t0 = time.perf_counter()
     points = space.enumerate()
-    with _PointEvaluator(evaluator, workers) as pe:
+    _LOG.info("exhaustive search: %d points over space %r (workers=%d)",
+              len(points), space.name, workers)
+    # the span is the single timing source: wall_s in the SearchResult /
+    # bench provenance AND the sweep event in the --trace file come from it
+    with span("dse.exhaustive_search", cat="dse", space=space.name,
+              n_points=len(points), workers=workers) as sp, \
+            _PointEvaluator(evaluator, workers) as pe:
         evals = pe.map(points, log=log)
     return SearchResult(space=space.name, strategy="exhaustive", evals=evals,
                         frontier=pareto_frontier(evals),
-                        wall_s=time.perf_counter() - t0,
+                        wall_s=sp.duration_s,
                         cache_stats=evaluator.cache.stats)
 
 
@@ -204,11 +232,15 @@ def evolutionary_search(space: DesignSpace, evaluator: Evaluator,
     archive updates stay in submission order, so the run is reproducible at
     any worker count.
     """
-    t0 = time.perf_counter()
     rng = random.Random(seed)
     archive: dict[str, DesignEval] = {}
+    _LOG.info("evolutionary search: pop=%d gens=%d over space %r "
+              "(workers=%d)", population, generations, space.name, workers)
 
-    with _PointEvaluator(evaluator, workers) as pe:
+    with span("dse.evolutionary_search", cat="dse", space=space.name,
+              population=population, generations=generations,
+              workers=workers) as sp, \
+            _PointEvaluator(evaluator, workers) as pe:
 
         def eval_points(points: list[DesignPoint]) -> list[DesignEval]:
             todo, seen_names = [], set()
@@ -246,7 +278,7 @@ def evolutionary_search(space: DesignSpace, evaluator: Evaluator,
     evals = list(archive.values())
     return SearchResult(space=space.name, strategy="evolutionary",
                         evals=evals, frontier=pareto_frontier(evals),
-                        wall_s=time.perf_counter() - t0,
+                        wall_s=sp.duration_s,
                         cache_stats=evaluator.cache.stats)
 
 

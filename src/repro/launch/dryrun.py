@@ -24,6 +24,10 @@ import json
 import time
 import traceback
 
+from repro.obs import get_logger
+
+log = get_logger("launch.dryrun")
+
 
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None,
              verbose: bool = True, profile: str = "tp",
@@ -64,20 +68,20 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None,
             mm = rec["memory"]
             per_dev = (mm["argument_size"] + mm["temp_size"]
                        + mm["output_size"] - mm["alias_size"]) / 1e9
-            print(f"[ok] {arch:26s} {shape:12s} {mesh_name}: "
-                  f"{per_dev:6.2f} GB/dev  "
-                  f"Tc={rl.t_compute*1e3:8.2f}ms Tm={rl.t_memory*1e3:8.2f}ms "
-                  f"Tx={rl.t_collective*1e3:8.2f}ms -> {rl.bottleneck}"
-                  f"  useful={rl.useful_flops_ratio:5.2f}"
-                  f"  roofline={rl.roofline_fraction*100:5.1f}%",
-                  flush=True)
+            log.info(
+                "[ok] %-26s %-12s %s: %6.2f GB/dev  "
+                "Tc=%8.2fms Tm=%8.2fms Tx=%8.2fms -> %s  "
+                "useful=%5.2f  roofline=%5.1f%%",
+                arch, shape, mesh_name, per_dev, rl.t_compute * 1e3,
+                rl.t_memory * 1e3, rl.t_collective * 1e3, rl.bottleneck,
+                rl.useful_flops_ratio, rl.roofline_fraction * 100)
     except Exception as e:  # noqa: BLE001 — failures ARE the result here
         rec.update(status="fail", seconds=time.time() - t0,
                    error=f"{type(e).__name__}: {e}",
                    trace=traceback.format_exc()[-2000:])
         if verbose:
-            print(f"[FAIL] {arch} {shape} {mesh_name}: {rec['error'][:200]}",
-                  flush=True)
+            log.error("[FAIL] %s %s %s: %s", arch, shape, mesh_name,
+                      rec["error"][:200])
 
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
@@ -101,6 +105,8 @@ def main() -> int:
     ap.add_argument("--shapes", default=None,
                     help="comma list filter when using --all")
     args = ap.parse_args()
+    from repro.obs import configure
+    configure(1)  # per-cell progress is this CLI's whole point
 
     from repro.launch.cells import SHAPES, all_cells
 
