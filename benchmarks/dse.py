@@ -28,12 +28,25 @@ the output file by default) and skip the mapper entirely for already-seen
 (design, layer) pairs — worker-computed entries merge back on join.
 ``--dry-run`` validates arguments and lowers the zoo, prints the sweep plan,
 and exits before any mapping search (used by ``scripts/docs_examples.py``).
+
+Sweeps are crash-safe (see ``docs/ROBUSTNESS.md``): evaluations run under a
+supervised worker pool with per-task timeouts (``--task-timeout``), bounded
+retries (``--max-retries``) and poison-point quarantine, and every completed
+evaluation checkpoints to a run ledger next to the output file.  A sweep
+killed mid-run (Ctrl-C, SIGTERM, OOM-kill) leaves a partial artifact with
+``"partial": true`` plus the ledger; ``--resume`` restarts it evaluating
+only the missing points.  ``--inject-faults SPEC`` (or the ``REPRO_FAULTS``
+env var) arms the deterministic fault-injection harness — e.g.
+``--inject-faults crash=1,hang=1,corrupt=1`` — whose injected sweep must
+produce a frontier bit-identical to the clean run (the ``scripts/check.sh``
+robustness gate).
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import signal
 import sys
 import time
 
@@ -43,10 +56,14 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, p)
 
 from repro.configs import ARCH_IDS, resolve_ids
-from repro.dse import (Evaluator, MappingCache, SPACES, format_frontier,
-                       format_models, format_scorecard, load_zoo, run_search,
+from repro.dse import (Evaluator, FaultPlan, MappingCache, RunLedger,
+                       SPACES, Supervisor, SupervisorConfig,
+                       corrupt_cache_file, format_frontier, format_models,
+                       format_scorecard, load_zoo, pareto_frontier,
+                       parse_fault_spec, plan_from_env, run_search,
                        write_bench_json, write_models_json)
 from repro.dse.evaluate import DEFAULT_ZOO
+from repro.dse.search import SearchResult
 from repro.frontend import PHASES
 from repro.obs import (add_verbosity_flag, configure, enable_tracing,
                        save_trace, set_metrics_enabled)
@@ -120,6 +137,26 @@ def main(argv=None) -> int:
                     choices=["auto", "exhaustive", "evolutionary"])
     ap.add_argument("--workers", type=int, default=1,
                     help="process-pool fan-out for design evaluations")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume an interrupted sweep from its run ledger: "
+                         "already-completed points are adopted, only the "
+                         "missing ones evaluate")
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="run-ledger checkpoint file "
+                         "(default: <out>.ledger)")
+    ap.add_argument("--task-timeout", type=float, default=120.0,
+                    metavar="S",
+                    help="per-evaluation timeout with workers>1: a worker "
+                         "past it is killed and the point retried "
+                         "(0 disables; default 120)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="failures per design point before it is "
+                         "quarantined as a failure stub (default 2)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'crash=1,hang=1,transient=1,corrupt=1,seed=3' "
+                         "(also: kill_after=N, hang_s=S); falls back to "
+                         "the REPRO_FAULTS env var; see docs/ROBUSTNESS.md")
     ap.add_argument("--max-exhaustive", type=int, default=512,
                     help="auto strategy: exhaustive up to this many raw "
                          "points, evolutionary beyond")
@@ -213,14 +250,42 @@ def main(argv=None) -> int:
               f"write {out}")
         return 0
 
+    try:
+        plan = (parse_fault_spec(args.inject_faults) if args.inject_faults
+                else plan_from_env() or FaultPlan())
+    except ValueError as e:
+        ap.error(str(e))
+    if plan.active:
+        print(f"  fault injection armed: {plan.spec()}")
+
     cache_path = None
     if not args.no_cache:
         cache_path = args.cache_path or os.path.join(
             os.path.dirname(os.path.abspath(out)),
             ".dse_mapping_cache.json")
+    if plan.corrupt and cache_path and os.path.exists(cache_path):
+        hit = corrupt_cache_file(cache_path, plan.corrupt, plan.seed)
+        print(f"  fault injection: corrupted {hit} mapping-cache "
+              f"entries in {cache_path}")
     cache = MappingCache(cache_path)
     if len(cache):
         print(f"  mapping cache: {len(cache)} entries from {cache_path}")
+
+    # run ledger: checkpoint of completed evaluations, keyed to this exact
+    # sweep so --resume can never splice two different configurations
+    run_key = {"space": space.name, "configs": configs, "seqs": seqs,
+               "batch": args.batch, "phases": list(phases),
+               "objective": args.objective, "nets": args.nets,
+               "models": bool(args.models)}
+    ledger = RunLedger(args.ledger or out + ".ledger", run_key=run_key)
+    completed = {}
+    if args.resume:
+        loaded = ledger.load()
+        completed = ledger.completed_evals()
+        cache.merge(ledger.cache_entries())
+        print(f"  resume: adopted {len(completed)} completed evaluations "
+              f"from {ledger.path}" if loaded else
+              f"  resume: no usable ledger at {ledger.path} — full sweep")
 
     evaluator = Evaluator(zoo=zoo, cache=cache, objective=args.objective,
                           baseline="gemmini" if args.models else None)
@@ -228,9 +293,48 @@ def main(argv=None) -> int:
         # baselines depend only on the zoo — score them once in the parent
         # (workers recompute lazily from the same zoo, deterministically)
         evaluator.baselines
-    result = run_search(space, evaluator, strategy=args.strategy, log=log,
-                        workers=args.workers,
-                        max_exhaustive=args.max_exhaustive)
+
+    sup = Supervisor(
+        evaluator, workers=args.workers,
+        cfg=SupervisorConfig(
+            task_timeout_s=args.task_timeout if args.task_timeout > 0
+            else None,
+            max_retries=args.max_retries),
+        fault_plan=plan if plan.active else None,
+        ledger=ledger, completed=completed)
+    meta = {"configs": configs, "seqs": seqs, "batch": args.batch,
+            "phases": list(phases), "objective": args.objective,
+            "workers": args.workers, "ledger": ledger.path,
+            "resume": bool(args.resume),
+            "faults": plan.spec() if plan.active else None}
+
+    # a SIGTERM (e.g. an OOM-killer sibling or batch-system preemption)
+    # takes the same checkpoint path as Ctrl-C
+    signal.signal(signal.SIGTERM,
+                  lambda s, f: (_ for _ in ()).throw(KeyboardInterrupt()))
+    try:
+        result = run_search(space, evaluator, strategy=args.strategy,
+                            log=log, workers=args.workers, supervisor=sup,
+                            max_exhaustive=args.max_exhaustive)
+    except KeyboardInterrupt:
+        # the supervisor already flushed the ledger on its way out; leave a
+        # partial artifact instead of dying with nothing
+        evals = ledger.evals()
+        partial = SearchResult(
+            space=space.name, strategy=args.strategy, evals=evals,
+            frontier=pareto_frontier(evals),
+            wall_s=time.perf_counter() - t0, cache_stats=cache.stats,
+            supervisor=dict(sup.stats))
+        meta["partial"] = True
+        meta["total_wall_s"] = time.perf_counter() - t0
+        write_bench_json(out, partial, meta=meta, partial=True)
+        cache.save()
+        if args.trace:
+            save_trace(args.trace)
+        print(f"\ninterrupted after {len(evals)} evaluations — partial "
+              f"artifact {out} + ledger {ledger.path}; rerun with "
+              f"--resume to finish", flush=True)
+        return 130
     cache.save()
 
     print()
@@ -246,10 +350,8 @@ def main(argv=None) -> int:
         artifacts = emit_frontier_rtl(result, args.emit_dir)
 
     wall = time.perf_counter() - t0
-    meta = {"configs": configs, "seqs": seqs, "batch": args.batch,
-            "phases": list(phases), "objective": args.objective,
-            "workers": args.workers, "strategy": result.strategy,
-            "total_wall_s": wall}
+    meta.update({"strategy": result.strategy, "total_wall_s": wall,
+                 "supervisor": dict(sup.stats)})
     if args.models:
         write_models_json(out, result, model_ids=configs,
                           baselines=evaluator.baselines, meta=meta,
@@ -261,9 +363,13 @@ def main(argv=None) -> int:
         print(f"  trace: {len(payload['traceEvents'])} events -> "
               f"{args.trace}")
     cs = result.cache_stats
+    ss = result.supervisor
+    extra = "".join(
+        f"; {k}={ss[k]}" for k in ("resumed", "retries", "respawns",
+                                   "quarantined", "timeouts") if ss.get(k))
     print(f"\nswept {result.n_designs} designs x {len(zoo)} configs in "
           f"{wall:.1f}s (workers={args.workers}; mapper cache: "
-          f"{cs['hits']} hits / {cs['misses']} misses); wrote {out}")
+          f"{cs['hits']} hits / {cs['misses']} misses{extra}); wrote {out}")
     return 0
 
 

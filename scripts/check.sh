@@ -156,4 +156,76 @@ fi
 echo "budget OK: ${elapsed}s"
 
 echo
+echo "== robustness gate: injected faults must not change the frontier =="
+# clean reference sweep (also warms the shared mapping cache so corrupt=1
+# has entries to corrupt on the faulted runs)
+python benchmarks/dse.py --quick -q \
+    --out "$tmp/rob_clean.json" --cache-path "$tmp/rob_cache.json"
+# same sweep under 1 crash + 1 hang + 1 transient + 1 corrupt cache entry,
+# at workers=1 (in-process fault path) and workers=4 (real pool faults)
+for w in 1 4; do
+    python benchmarks/dse.py --quick -q --workers "$w" \
+        --inject-faults "crash=1,hang=1,transient=1,corrupt=1,seed=3,hang_s=30" \
+        --task-timeout 5 \
+        --out "$tmp/rob_w$w.json" --cache-path "$tmp/rob_cache.json"
+done
+python - "$tmp/rob_clean.json" "$tmp/rob_w1.json" "$tmp/rob_w4.json" <<'PY'
+import json, sys
+clean, w1, w4 = (json.load(open(p)) for p in sys.argv[1:4])
+ref = json.dumps(clean["frontier"], sort_keys=True)
+for name, p in (("workers=1", w1), ("workers=4", w4)):
+    assert json.dumps(p["frontier"], sort_keys=True) == ref, \
+        f"injected-fault frontier differs from clean run at {name}"
+    assert p["supervisor"]["retries"] >= 3, \
+        f"{name}: expected >=3 retries, got {p['supervisor']}"
+    assert p["supervisor"]["quarantined"] == 0, \
+        f"{name}: injected faults must recover, not quarantine"
+    c = p["metrics"]["counters"]
+    assert c.get("dse.retries", 0) >= 3, f"{name}: dse.retries missing"
+    assert c.get("mapper_cache.corrupt_entries", 0) >= 1, \
+        f"{name}: corrupt cache entry not detected"
+sup4 = w4["supervisor"]
+assert sup4["respawns"] >= 2 and sup4["timeouts"] >= 1, \
+    f"workers=4: expected crash respawn + hang timeout, got {sup4}"
+print(f"fault injection OK: frontier byte-identical at workers=1 and 4 "
+      f"(w4 stats: retries={sup4['retries']} respawns={sup4['respawns']} "
+      f"timeouts={sup4['timeouts']})")
+PY
+
+echo
+echo "== robustness gate: mid-sweep kill -> partial artifact -> --resume =="
+status=0
+python benchmarks/dse.py --quick -q \
+    --inject-faults "kill_after=3" \
+    --out "$tmp/rob_part.json" --cache-path "$tmp/rob_cache.json" \
+    || status=$?
+[ "$status" -eq 130 ] || {
+    echo "killed sweep expected exit 130, got $status" >&2; exit 1; }
+python - "$tmp/rob_part.json" <<'PY'
+import json, os, sys
+p = json.load(open(sys.argv[1]))
+assert p["partial"] is True, "killed sweep must write a partial artifact"
+assert len(p["designs"]) == 3, f"expected 3 checkpointed evals, got {len(p['designs'])}"
+assert os.path.exists(sys.argv[1] + ".ledger"), "run ledger missing"
+print("partial artifact OK: 3 evals checkpointed before the kill")
+PY
+python benchmarks/dse.py --quick -q --resume \
+    --out "$tmp/rob_part.json" --cache-path "$tmp/rob_cache.json"
+python - "$tmp/rob_clean.json" "$tmp/rob_part.json" <<'PY'
+import json, sys
+clean, resumed = json.load(open(sys.argv[1])), json.load(open(sys.argv[2]))
+assert resumed["partial"] is False, "resumed artifact still marked partial"
+assert resumed["supervisor"]["resumed"] == 3, \
+    f"expected 3 ledger-adopted evals, got {resumed['supervisor']}"
+assert resumed["supervisor"]["evaluated"] == resumed["n_designs"] - 3, \
+    "resume re-evaluated already-finished points"
+assert json.dumps(resumed["frontier"], sort_keys=True) == \
+    json.dumps(clean["frontier"], sort_keys=True), \
+    "resumed frontier differs from the clean run"
+print(f"resume OK: exit 130 + partial artifact, then "
+      f"{resumed['supervisor']['resumed']} resumed / "
+      f"{resumed['supervisor']['evaluated']} evaluated, frontier identical")
+PY
+
+echo
 echo "check.sh: OK"

@@ -1,29 +1,39 @@
 """Design-space exploration engine (paper direction: "generate one
 architecture for diverse modern foundation models").
 
-``space``     — declarative :class:`DesignSpace` over candidate ``HWConfig``s
-``evaluate``  — lower every model config to layer workloads, score each design
-``cache``     — content-hashed persistent mapping cache (JSON on disk)
-``search``    — Pareto frontier + exhaustive / evolutionary strategies
-``report``    — frontier pretty-printer and ``BENCH_dse.json`` writer
+``space``      — declarative :class:`DesignSpace` over candidate ``HWConfig``s
+``evaluate``   — lower every model config to layer workloads, score each design
+``cache``      — content-hashed persistent mapping cache (JSON on disk;
+checksummed entries, lock-guarded multi-process merge)
+``search``     — Pareto frontier + exhaustive / evolutionary strategies
+``supervisor`` — crash-safe worker pool (timeouts, retries, quarantine,
+degradation) + resumable :class:`RunLedger` checkpoints
+``faults``     — seeded deterministic fault injection (crash/hang/transient/
+cache corruption) for the robustness gates
+``report``     — frontier pretty-printer and ``BENCH_dse.json`` writer
 """
 
-from .cache import MappingCache
+from .cache import MappingCache, atomic_write_json
 from .evaluate import (DesignEval, Evaluator, gemmini_zoo_baseline, load_zoo,
                        lower_config)
+from .faults import (FaultPlan, corrupt_cache_file, parse_fault_spec,
+                     plan_from_env)
 from .report import (cross_model_winner, format_frontier, format_models,
                      format_scorecard, write_bench_json, write_models_json)
 from .search import (SearchResult, dominates, evolutionary_search,
                      exhaustive_search, pareto_frontier, run_search)
 from .space import DATAFLOW_SETS, SPACES, DesignPoint, DesignSpace
+from .supervisor import RunLedger, Supervisor, SupervisorConfig
 
 __all__ = [
     "DesignPoint", "DesignSpace", "SPACES", "DATAFLOW_SETS",
-    "MappingCache",
+    "MappingCache", "atomic_write_json",
     "Evaluator", "DesignEval", "load_zoo", "lower_config",
     "gemmini_zoo_baseline",
     "pareto_frontier", "dominates", "exhaustive_search",
     "evolutionary_search", "run_search", "SearchResult",
+    "Supervisor", "SupervisorConfig", "RunLedger",
+    "FaultPlan", "parse_fault_spec", "plan_from_env", "corrupt_cache_file",
     "format_frontier", "format_scorecard", "write_bench_json",
     "cross_model_winner", "format_models", "write_models_json",
 ]

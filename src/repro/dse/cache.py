@@ -13,6 +13,18 @@ rename) so an interrupted sweep never corrupts it.  Entries hold the
 :class:`~repro.core.perf_model.LayerPerf` numbers plus the winning spatial
 dataflow name — everything the evaluator aggregates — not the ``Dataflow``
 object itself, which is cheap to rebuild on demand.
+
+A *shared* cache path is multi-process safe (modeled on JAX's
+compilation-cache get/put discipline):
+
+* every entry is stored with a payload checksum; ``load`` quarantines
+  corrupt entries individually (skip + ``mapper_cache.corrupt_entries``
+  counter) instead of cold-caching the whole store;
+* ``save`` takes a lock file and does a read-**merge**-write — entries
+  written by concurrent sweeps sharing the path converge into a union
+  rather than last-writer-wins (``mapper_cache.lock_waits`` counts
+  contention; stale locks are broken after a timeout so a crashed holder
+  can never deadlock a sweep).
 """
 
 from __future__ import annotations
@@ -21,18 +33,29 @@ import hashlib
 import json
 import os
 import tempfile
+import time
+from contextlib import contextmanager
 
 from repro.core.mapper import Mapping, SpatialChoice, best_mapping
 from repro.core.mapper_batch import best_mappings
 from repro.core.perf_model import HWConfig, LayerPerf
 from repro.core.workload import Workload
-from repro.obs import METRICS
+from repro.obs import METRICS, get_logger
 
-__all__ = ["MappingCache", "mapping_key", "atomic_write_json"]
+__all__ = ["MappingCache", "mapping_key", "atomic_write_json",
+           "entry_checksum"]
 
-_SCHEMA = 2  # bump to invalidate stale caches when the perf model changes
+_LOG = get_logger("dse.cache")
+
+_SCHEMA = 3  # bump to invalidate stale caches when the perf model changes
 # (2: tile search default-on widened the candidate space — cached winners
-# from schema 1 could be stale narrower-space results)
+# from schema 1 could be stale narrower-space results;
+#  3: per-entry payload checksums — schema-2 files carry no sums, so a
+# corrupt entry could not be quarantined individually)
+
+_LOCK_TIMEOUT_S = 10.0   # give up waiting and break the lock after this
+_LOCK_STALE_S = 30.0     # a lock older than this is from a dead process
+_LOCK_POLL_S = 0.05
 
 
 def atomic_write_json(path: str, payload, **dump_kw) -> None:
@@ -48,6 +71,57 @@ def atomic_write_json(path: str, payload, **dump_kw) -> None:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+
+
+def entry_checksum(value: dict) -> str:
+    """Content checksum of one cache-entry payload (stored next to the
+    entry on ``save``, verified on ``load``)."""
+    blob = json.dumps(value, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+@contextmanager
+def _cache_lock(path: str, timeout: float = _LOCK_TIMEOUT_S):
+    """Exclusive advisory lock on ``path`` via an ``O_EXCL`` lock file.
+
+    Waiting bumps ``mapper_cache.lock_waits`` once per acquisition; locks
+    older than ``_LOCK_STALE_S`` (or held past ``timeout``) are broken —
+    a sweep must never deadlock on the leavings of a crashed process."""
+    lock = path + ".lock"
+    d = os.path.dirname(os.path.abspath(lock)) or "."
+    os.makedirs(d, exist_ok=True)
+    t0 = time.monotonic()
+    waited = False
+    while True:
+        try:
+            fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            os.write(fd, str(os.getpid()).encode())
+            os.close(fd)
+            break
+        except FileExistsError:
+            if not waited:
+                waited = True
+                METRICS.counter("mapper_cache.lock_waits").inc()
+            try:
+                age = time.time() - os.path.getmtime(lock)
+            except OSError:
+                continue  # holder released between open and stat — retry
+            if age > _LOCK_STALE_S or time.monotonic() - t0 > timeout:
+                _LOG.warning("breaking stale mapping-cache lock %s "
+                             "(age %.1fs)", lock, age)
+                try:
+                    os.unlink(lock)
+                except OSError:
+                    pass
+                continue
+            time.sleep(_LOCK_POLL_S)
+    try:
+        yield
+    finally:
+        try:
+            os.unlink(lock)
+        except OSError:
+            pass
 
 
 def mapping_key(wl: Workload, dims: dict[str, int],
@@ -88,6 +162,36 @@ class MappingCache:
         return len(self._store)
 
     # -- persistence ------------------------------------------------------
+    def _validated_entries(self, payload, path: str) -> dict | None:
+        """Schema-check a loaded payload and drop corrupt entries.
+
+        Returns the checksum-valid entry dict, or ``None`` on a schema
+        mismatch (stale cache: evict wholesale).  Corrupt entries are
+        quarantined *individually* — a single flipped byte in a shared
+        store must cost one recompute, not the whole warm cache."""
+        schema = payload.get("schema")
+        if schema != _SCHEMA:
+            _LOG.warning("mapping cache %s has schema %r (want %d) — "
+                         "evicting stale cache", path, schema, _SCHEMA)
+            METRICS.counter("mapper_cache.schema_evictions").inc()
+            return None
+        entries = payload.get("entries", {})
+        sums = payload.get("sums", {})
+        good: dict[str, dict] = {}
+        corrupt = 0
+        for k, v in entries.items():
+            s = sums.get(k)
+            if s is not None and s != entry_checksum(v):
+                corrupt += 1
+                continue
+            good[k] = v
+        if corrupt:
+            _LOG.warning("mapping cache %s: quarantined %d corrupt "
+                         "entr%s (checksum mismatch), kept %d", path,
+                         corrupt, "y" if corrupt == 1 else "ies", len(good))
+            METRICS.counter("mapper_cache.corrupt_entries").inc(corrupt)
+        return good
+
     def load(self, path: str | None = None) -> int:
         path = path or self.path
         if not path or not os.path.exists(path):
@@ -95,19 +199,46 @@ class MappingCache:
         try:
             with open(path) as f:
                 payload = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return 0  # unreadable cache == cold cache, never fatal
-        if payload.get("schema") != _SCHEMA:
+        except (OSError, json.JSONDecodeError) as e:
+            # unreadable cache == cold cache, never fatal — but a sweep
+            # that *should* have been warm must be diagnosable
+            _LOG.warning("mapping cache %s unreadable (%s: %s) — starting "
+                         "cold", path, type(e).__name__, e)
+            METRICS.counter("mapper_cache.load_failures").inc()
             return 0
-        self._store.update(payload.get("entries", {}))
+        entries = self._validated_entries(payload, path)
+        if entries is None:
+            return 0
+        self._store.update(entries)
         return len(self._store)
 
     def save(self, path: str | None = None) -> None:
+        """Persist under a lock file with read-merge-write semantics.
+
+        Concurrent sweeps sharing one cache path converge to the union of
+        their entries: the on-disk store is re-read under the lock, its
+        still-valid entries are adopted, and the merged store is written
+        atomically.  Entries are content-addressed and the mapper is
+        deterministic, so colliding keys are identical — in-memory wins."""
         path = path or self.path
         if not path or not self._dirty:
             return
-        atomic_write_json(path, {"schema": _SCHEMA, "entries": self._store},
-                          separators=(",", ":"))
+        with _cache_lock(path):
+            if os.path.exists(path):
+                try:
+                    with open(path) as f:
+                        on_disk = self._validated_entries(json.load(f), path)
+                except (OSError, json.JSONDecodeError):
+                    on_disk = None  # torn foreign write: overwrite it
+                if on_disk:
+                    for k, v in on_disk.items():
+                        self._store.setdefault(k, v)
+            atomic_write_json(
+                path,
+                {"schema": _SCHEMA, "entries": self._store,
+                 "sums": {k: entry_checksum(v)
+                          for k, v in self._store.items()}},
+                separators=(",", ":"))
         self._dirty = False
         self._journal.clear()  # persisted — nothing left to ship anywhere
 

@@ -117,6 +117,16 @@ class DesignEval:
     power_mw: float
     macs: float
     per_config: dict[str, dict] = field(default_factory=dict)
+    # robustness bookkeeping (repro.dse.supervisor): a point that exhausts
+    # its retry budget is recorded as a failure stub, not a sweep abort
+    error: str | None = None
+    retries: int = 0
+
+    @property
+    def failed(self) -> bool:
+        """True for a quarantined poison point — excluded from the Pareto
+        frontier, kept in the scorecard so the sweep stays auditable."""
+        return self.error is not None
 
     @property
     def gops(self) -> float:
@@ -131,10 +141,27 @@ class DesignEval:
         return (self.cycles, self.energy_pj, self.area_mm2)
 
     def as_dict(self) -> dict:
-        return {"design": self.point.as_dict(), "cycles": self.cycles,
-                "energy_pj": self.energy_pj, "area_mm2": self.area_mm2,
-                "power_mw": self.power_mw, "macs": self.macs,
-                "gops": self.gops, "per_config": self.per_config}
+        d = {"design": self.point.as_dict(), "cycles": self.cycles,
+             "energy_pj": self.energy_pj, "area_mm2": self.area_mm2,
+             "power_mw": self.power_mw, "macs": self.macs,
+             "gops": self.gops, "per_config": self.per_config}
+        if self.error is not None:
+            # only failure stubs carry retry provenance in artifacts: a
+            # recovered eval is bit-identical to one that never faulted
+            # (the check.sh injected-vs-clean frontier gate), with its
+            # retry count reported via the supervisor stats section
+            d["error"] = self.error
+            d["retries"] = self.retries
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DesignEval":
+        """Inverse of :meth:`as_dict` — the run-ledger resume path."""
+        return cls(point=DesignPoint.from_dict(d["design"]),
+                   cycles=d["cycles"], energy_pj=d["energy_pj"],
+                   area_mm2=d["area_mm2"], power_mw=d["power_mw"],
+                   macs=d["macs"], per_config=d.get("per_config", {}),
+                   error=d.get("error"), retries=int(d.get("retries", 0)))
 
 
 class Evaluator:

@@ -41,12 +41,17 @@ _HEADER = (f"{'design':<34} {'Mcycles':>12} {'energy mJ':>11} "
 
 
 def format_scorecard(evals: list[DesignEval], limit: int | None = None) -> str:
+    failed = [e for e in evals if e.failed]
     lines = [_HEADER, "-" * len(_HEADER)]
-    ordered = sorted(evals, key=lambda e: e.cycles)
+    ordered = sorted((e for e in evals if not e.failed),
+                     key=lambda e: e.cycles)
     for e in ordered[:limit]:
         lines.append(_row(e))
     if limit is not None and len(ordered) > limit:
         lines.append(f"... ({len(ordered) - limit} more)")
+    for e in failed:
+        lines.append(f"{e.point.name:<34} QUARANTINED after {e.retries} "
+                     f"failures: {e.error}")
     return "\n".join(lines)
 
 
@@ -169,6 +174,7 @@ def write_models_json(path: str, result: SearchResult,
         "n_designs": result.n_designs,
         "wall_s": result.wall_s,
         "cache": result.cache_stats,
+        "supervisor": result.supervisor,
         "meta": meta or {},
         **_observability_sections(metrics, provenance),
         "model_ids": model_ids,
@@ -199,7 +205,8 @@ def write_bench_json(path: str, result: SearchResult,
                      meta: dict | None = None,
                      artifacts: dict | None = None,
                      metrics: dict | None = None,
-                     provenance: dict | None = None) -> dict:
+                     provenance: dict | None = None,
+                     partial: bool = False) -> dict:
     """Dump the sweep to ``BENCH_dse.json`` (atomic write); returns payload.
 
     ``artifacts`` maps a dataflow set (``os``/``ws``/``switch``) to an
@@ -207,7 +214,10 @@ def write_bench_json(path: str, result: SearchResult,
     frontier entry gains an ``rtl`` key pointing at the netlist of its
     wiring class.  ``metrics``/``provenance`` override the default
     observability sections (global registry snapshot + a fresh
-    :func:`repro.obs.provenance_record`)."""
+    :func:`repro.obs.provenance_record`).  ``partial=True`` marks an
+    artifact flushed by the SIGINT/SIGTERM checkpoint path — the payload
+    covers only the evaluations that completed before the interrupt, and
+    ``benchmarks/dse.py --resume`` finishes the sweep from its ledger."""
     def entry(e: DesignEval) -> dict:
         d = e.as_dict()
         if artifacts:
@@ -221,15 +231,18 @@ def write_bench_json(path: str, result: SearchResult,
         "space": result.space,
         "strategy": result.strategy,
         "n_designs": result.n_designs,
+        "partial": bool(partial),
         "wall_s": result.wall_s,
         "cache": result.cache_stats,
+        "supervisor": result.supervisor,
         "meta": meta or {},
         **_observability_sections(metrics, provenance),
         "artifacts": artifacts or {},
         "frontier": [entry(e) for e in result.frontier],
         "designs": [entry(e) for e in result.evals],
-        "best": {obj: result.best(obj).point.name
-                 for obj in ("cycles", "energy", "area", "edp")},
     }
+    if result.frontier or result.evals:
+        payload["best"] = {obj: result.best(obj).point.name
+                           for obj in ("cycles", "energy", "area", "edp")}
     atomic_write_json(path, payload, indent=1)
     return payload

@@ -6,12 +6,18 @@ a :class:`SearchResult` holding every evaluated scorecard and the
 non-dominated subset over (cycles, energy, area).
 
 Both strategies accept ``workers=N``: independent :class:`DesignPoint`
-evaluations fan out across a process pool (each worker holds its own
+evaluations fan out across the **supervised worker pool**
+(:class:`~repro.dse.supervisor.Supervisor` — each worker holds its own
 in-memory :class:`~repro.dse.cache.MappingCache`, warm-started from the
 parent's entries) and results return **in submission order**, so the sweep
 is deterministic — the frontier is independent of the worker count.  New
 mapping-cache entries computed by workers merge back into the parent cache
-on join, so a later ``cache.save()`` persists them.
+with every result, so a later ``cache.save()`` persists them.  The
+supervisor adds per-task timeouts with hung-worker kill-and-respawn,
+bounded retries with backoff, poison-point quarantine, degradation to
+in-process evaluation, and an optional resumable run ledger — pass a
+pre-configured ``supervisor=`` to opt in; the default is a plain
+``Supervisor(evaluator, workers)`` with retries but no ledger.
 
 Observability: each search runs inside a :func:`repro.obs.span` (the single
 source of the reported ``wall_s``, and a trace event when tracing is on),
@@ -22,24 +28,20 @@ every result — the parent merges them, so one ``--trace`` file and one
 
 from __future__ import annotations
 
-import multiprocessing
 import random
-import sys
-from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
 
-from repro.obs import (METRICS, disable_tracing, drain_events,
-                       enable_tracing, get_logger, merge_events, span,
-                       tracing_enabled)
+from repro.obs import get_logger, span
 
 _LOG = get_logger("dse.search")
 
-from .cache import MappingCache
 from .evaluate import DesignEval, Evaluator
 from .space import DesignPoint, DesignSpace
+from .supervisor import Supervisor, SupervisorConfig
 
 __all__ = ["dominates", "pareto_frontier", "exhaustive_search",
-           "evolutionary_search", "run_search", "SearchResult"]
+           "evolutionary_search", "run_search", "SearchResult",
+           "Supervisor", "SupervisorConfig"]
 
 
 def dominates(a, b) -> bool:
@@ -53,8 +55,11 @@ def pareto_frontier(evals: list[DesignEval],
     """Non-dominated subset, sorted by first objective.
 
     O(n²) pairwise filtering — design-space sweeps are hundreds of points,
-    not millions; simplicity and determinism win here.
+    not millions; simplicity and determinism win here.  Quarantined
+    failure stubs (``e.failed``) never reach the frontier: their zeroed
+    objectives are a bookkeeping artifact, not a design.
     """
+    evals = [e for e in evals if not getattr(e, "failed", False)]
     out = []
     vecs = [key(e) for e in evals]
     for i, e in enumerate(evals):
@@ -83,6 +88,7 @@ class SearchResult:
     frontier: list[DesignEval]
     wall_s: float = 0.0
     cache_stats: dict = field(default_factory=dict)
+    supervisor: dict = field(default_factory=dict)  # retries/respawns/...
 
     @property
     def n_designs(self) -> int:
@@ -97,97 +103,19 @@ class SearchResult:
 
 
 # ---------------------------------------------------------------------------
-# process-pool fan-out
+# supervised fan-out (see repro.dse.supervisor for the pool machinery)
 # ---------------------------------------------------------------------------
 
-_WORKER: dict = {}
-
-
-def _init_worker(zoo, objective, warm_entries, baseline=None,
-                 trace: bool = False):
-    """Build this worker's Evaluator around a private in-memory mapping
-    cache, warm-started with the parent's entries.
-
-    Observability state is reset first: a forked worker inherits the
-    parent's trace buffer and metric totals, which would double-count on
-    merge.  Tracing is re-enabled iff the parent traced."""
-    drain_events()
-    METRICS.reset()
-    enable_tracing() if trace else disable_tracing()
-    cache = MappingCache()
-    cache.merge(warm_entries)  # merge bypasses the put() journal, so the
-    _WORKER["ev"] = Evaluator(  # warm entries never echo back to the parent
-        zoo=zoo, cache=cache, objective=objective, baseline=baseline)
-
-
-def _worker_eval(point: DesignPoint):
-    ev: Evaluator = _WORKER["ev"]
-    h0, m0 = ev.cache.hits, ev.cache.misses
-    e = ev.evaluate(point)
-    return (e, ev.cache.drain_new(),
-            ev.cache.hits - h0, ev.cache.misses - m0,
-            drain_events(), METRICS.drain())
-
-
-class _PointEvaluator:
-    """Sequential or process-pool DesignPoint evaluation with in-order
-    results and mapping-cache merge-on-join."""
-
-    def __init__(self, evaluator: Evaluator, workers: int = 1):
-        self.evaluator = evaluator
-        self.workers = max(1, int(workers))
-        self._pool = None
-        if self.workers > 1:
-            # The DSE stack is pure NumPy, so forking is cheap and safe —
-            # unless the host process already loaded the (multithreaded)
-            # JAX runtime, in which case spawn fresh workers instead.
-            ctx = multiprocessing.get_context(
-                "spawn" if "jax" in sys.modules else None)
-            self._pool = ProcessPoolExecutor(
-                max_workers=self.workers, mp_context=ctx,
-                initializer=_init_worker,
-                initargs=(evaluator.zoo, evaluator.objective,
-                          evaluator.cache.snapshot(),
-                          getattr(evaluator, "baseline", None),
-                          tracing_enabled()))
-
-    def map(self, points: list[DesignPoint], log=None) -> list[DesignEval]:
-        if self._pool is None:
-            out = []
-            for i, p in enumerate(points):
-                out.append(self.evaluator.evaluate(p))
-                if log:
-                    log(f"[{i + 1}/{len(points)}] {p.name}")
-            return out
-        cache = self.evaluator.cache
-        chunk = max(1, len(points) // (self.workers * 4))
-        out = []
-        for i, (e, new, dh, dm, events, metrics) in enumerate(
-                self._pool.map(_worker_eval, points, chunksize=chunk)):
-            cache.merge(new)
-            cache.hits += dh
-            cache.misses += dm
-            merge_events(events)
-            METRICS.merge(metrics)
-            out.append(e)
-            if log:
-                log(f"[{i + 1}/{len(points)}] {points[i].name}")
-        return out
-
-    def close(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown()
-            self._pool = None
-
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        self.close()
+def _supervised(evaluator: Evaluator, workers: int,
+                supervisor: Supervisor | None) -> Supervisor:
+    if supervisor is not None:
+        return supervisor
+    return Supervisor(evaluator, workers=workers)
 
 
 def exhaustive_search(space: DesignSpace, evaluator: Evaluator,
-                      log=None, workers: int = 1) -> SearchResult:
+                      log=None, workers: int = 1,
+                      supervisor: Supervisor | None = None) -> SearchResult:
     points = space.enumerate()
     _LOG.info("exhaustive search: %d points over space %r (workers=%d)",
               len(points), space.name, workers)
@@ -195,12 +123,13 @@ def exhaustive_search(space: DesignSpace, evaluator: Evaluator,
     # bench provenance AND the sweep event in the --trace file come from it
     with span("dse.exhaustive_search", cat="dse", space=space.name,
               n_points=len(points), workers=workers) as sp, \
-            _PointEvaluator(evaluator, workers) as pe:
+            _supervised(evaluator, workers, supervisor) as pe:
         evals = pe.map(points, log=log)
     return SearchResult(space=space.name, strategy="exhaustive", evals=evals,
                         frontier=pareto_frontier(evals),
                         wall_s=sp.duration_s,
-                        cache_stats=evaluator.cache.stats)
+                        cache_stats=evaluator.cache.stats,
+                        supervisor=dict(pe.stats))
 
 
 def _scalar_rank(evals: list[DesignEval]) -> list[float]:
@@ -221,8 +150,8 @@ def _scalar_rank(evals: list[DesignEval]) -> list[float]:
 
 def evolutionary_search(space: DesignSpace, evaluator: Evaluator,
                         population: int = 12, generations: int = 8,
-                        seed: int = 0, log=None,
-                        workers: int = 1) -> SearchResult:
+                        seed: int = 0, log=None, workers: int = 1,
+                        supervisor: Supervisor | None = None) -> SearchResult:
     """Archive-based (μ+λ) random-mutation search.
 
     Every evaluated point enters the archive keyed by its name, so mutation
@@ -240,7 +169,7 @@ def evolutionary_search(space: DesignSpace, evaluator: Evaluator,
     with span("dse.evolutionary_search", cat="dse", space=space.name,
               population=population, generations=generations,
               workers=workers) as sp, \
-            _PointEvaluator(evaluator, workers) as pe:
+            _supervised(evaluator, workers, supervisor) as pe:
 
         def eval_points(points: list[DesignPoint]) -> list[DesignEval]:
             todo, seen_names = [], set()
@@ -279,18 +208,22 @@ def evolutionary_search(space: DesignSpace, evaluator: Evaluator,
     return SearchResult(space=space.name, strategy="evolutionary",
                         evals=evals, frontier=pareto_frontier(evals),
                         wall_s=sp.duration_s,
-                        cache_stats=evaluator.cache.stats)
+                        cache_stats=evaluator.cache.stats,
+                        supervisor=dict(pe.stats))
 
 
 def run_search(space: DesignSpace, evaluator: Evaluator,
                strategy: str = "auto", max_exhaustive: int = 96,
-               log=None, workers: int = 1, **kw) -> SearchResult:
+               log=None, workers: int = 1,
+               supervisor: Supervisor | None = None, **kw) -> SearchResult:
     if strategy == "auto":
         strategy = ("exhaustive" if space.raw_size <= max_exhaustive
                     else "evolutionary")
     if strategy == "exhaustive":
-        return exhaustive_search(space, evaluator, log=log, workers=workers)
+        return exhaustive_search(space, evaluator, log=log, workers=workers,
+                                 supervisor=supervisor)
     if strategy == "evolutionary":
         return evolutionary_search(space, evaluator, log=log,
-                                   workers=workers, **kw)
+                                   workers=workers, supervisor=supervisor,
+                                   **kw)
     raise ValueError(f"unknown strategy {strategy!r}")

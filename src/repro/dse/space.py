@@ -117,6 +117,14 @@ class DesignPoint:
                 "buffer_kb": self.buffer_kb, "dram_gbps": self.dram_gbps,
                 "dataflow_set": self.dataflow_set, "fused": self.fused}
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "DesignPoint":
+        """Inverse of :meth:`as_dict` (``name``/``fused`` are derived) —
+        the run-ledger resume path rebuilds points from checkpoint JSON."""
+        return cls(n_fus=int(d["n_fus"]), buffer_kb=int(d["buffer_kb"]),
+                   dram_gbps=float(d["dram_gbps"]),
+                   dataflow_set=d["dataflow_set"])
+
 
 @dataclass(frozen=True)
 class DesignSpace:

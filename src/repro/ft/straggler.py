@@ -43,7 +43,9 @@ class StragglerMonitor:
 
     def record(self, step_times: dict[int, float]) -> None:
         """step_times: host -> seconds for this step (absent = missed
-        heartbeat)."""
+        heartbeat).  Streak accounting happens here — once per recorded
+        step — so :meth:`stragglers` / :meth:`healthy` are pure queries
+        that can be called any number of times between steps."""
         self.step += 1
         for h in range(self.n_hosts):
             if h in step_times:
@@ -54,13 +56,10 @@ class StragglerMonitor:
                     self.alpha * t + (1 - self.alpha) * prev
             else:
                 self.missed[h] += 1
-
-    def stragglers(self) -> list[int]:
         valid = self.ewma[~np.isnan(self.ewma)]
         if len(valid) < max(2, self.n_hosts // 2):
-            return []
+            return
         med = float(np.median(valid))
-        out = []
         for h in range(self.n_hosts):
             if np.isnan(self.ewma[h]):
                 continue
@@ -68,9 +67,13 @@ class StragglerMonitor:
                 self.slow_streak[h] += 1
             else:
                 self.slow_streak[h] = 0
-            if self.slow_streak[h] >= self.patience:
-                out.append(h)
-        return out
+
+    def stragglers(self) -> list[int]:
+        """Hosts whose EWMA has exceeded ``ratio_threshold ×`` the fleet
+        median for ``patience`` consecutive recorded steps.  Pure — the
+        streaks advance only in :meth:`record`."""
+        return [h for h in range(self.n_hosts)
+                if self.slow_streak[h] >= self.patience]
 
     def dead(self) -> list[int]:
         return [h for h in range(self.n_hosts)

@@ -111,6 +111,26 @@ class TestStraggler:
             mon.record({h: 1.0 for h in range(4) if h != 2})
         assert mon.dead() == [2]
 
+    def test_stragglers_query_is_pure(self):
+        # regression: stragglers() used to advance slow_streak on every
+        # call, so polling twice per step flagged hosts at half the
+        # configured patience (and healthy() doubled the advance again)
+        mon = StragglerMonitor(8, patience=4)
+        for step in range(2):
+            times = {h: 1.0 for h in range(8)}
+            times[5] = 3.0
+            mon.record(times)
+            first, second = mon.stragglers(), mon.stragglers()
+            assert first == second == []
+            mon.healthy()  # also a pure query
+        assert mon.slow_streak[5] == 2  # one increment per recorded step
+        for step in range(2):
+            times = {h: 1.0 for h in range(8)}
+            times[5] = 3.0
+            mon.record(times)
+        assert mon.stragglers() == [5]
+        assert mon.stragglers() == [5]
+
     def test_elastic_plan_full_fleet(self):
         pl = ElasticPlanner(devices_per_host=4, model_axis=16, pods=2,
                             hosts_per_pod=64)
