@@ -20,6 +20,14 @@ Layer mappings are solved by the batched NumPy engine (all candidates of a
 layer batch in one broadcasted perf-kernel pass) and ``--workers N`` fans
 independent design evaluations across a process pool, so even a cold large
 sweep (hundreds of designs × multiple sequence lengths) finishes in seconds.
+``--engine jax`` swaps the scoring pass for the AOT-compiled XLA kernels
+(:mod:`repro.core.perf_model_jax`); selection and all reported numbers stay
+on the NumPy path, so the frontier is byte-identical across engines — the
+``scripts/check.sh`` engine-parity gate holds ``--engine numpy`` and
+``--engine jax`` to the same artifact.  The chosen engine (and jax version)
+is stamped into the ``provenance`` section of the output JSON, and
+``engine_bench`` in the meta section records a micro-benchmark of the
+candidate fan-out on every available engine.
 ``--seq`` accepts a comma list (e.g. ``--seq 512,4096``) to score several
 prefill lengths in one sweep; ``--space large`` defaults to ``512,4096``.
 
@@ -100,6 +108,55 @@ def emit_frontier_rtl(result, out_dir: str) -> dict:
     return artifacts
 
 
+def engine_microbench(repeats: int = 5) -> dict:
+    """Time the per-batch candidate fan-out on every available engine.
+
+    One representative mapping batch (a transformer-ish GEMM fan-out) is
+    built once, then scored through ``evaluate_batch`` per engine:
+    ``numpy`` reports the median wall time, ``jax`` reports the cold
+    dispatch (compile + execute) and the warm median separately — the
+    compile-vs-execute split that decides when the XLA engine pays off.
+    Recorded under ``meta["engine_bench"]`` in ``BENCH_dse.json``.
+    """
+    import statistics
+
+    from repro.core import workload as W
+    from repro.core.mapper import SpatialChoice
+    from repro.core.mapper_batch import build_batch, evaluate_batch
+    from repro.core.perf_model import HWConfig
+    from repro.core.perf_model_jax import clear_compile_cache, jax_available
+
+    wl = W.gemm()
+    hw = HWConfig(n_fus=256)
+    sps = [SpatialChoice(("i", "j"), (1, 1), "ij"),
+           SpatialChoice(("k", "j"), (1, 1), "jk")]
+    d = 2048
+    dims_list = [{"i": s, "j": j, "k": d}
+                 for s in (256, 512, 1024) for j in (d, 3 * d, 4 * d)]
+    ppu_list = [0.0] * len(dims_list)
+    batch = build_batch(wl, dims_list, sps, hw)
+
+    def timed(engine, n):
+        ts = []
+        for _ in range(n):
+            t = time.perf_counter()
+            evaluate_batch(batch, hw, dims_list, ppu_list, engine=engine)
+            ts.append(time.perf_counter() - t)
+        return ts
+
+    out = {"workload": wl.name, "layers": len(dims_list),
+           "candidates": batch.n_candidates, "engines": {}}
+    out["engines"]["numpy"] = {
+        "warm_ms": statistics.median(timed("numpy", repeats)) * 1e3}
+    if jax_available():
+        clear_compile_cache()
+        cold = timed("jax", 1)[0]
+        out["engines"]["jax"] = {
+            "cold_ms": cold * 1e3,
+            "warm_ms": statistics.median(timed("jax", repeats)) * 1e3}
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--space", default=None, choices=sorted(SPACES),
@@ -163,6 +220,15 @@ def main(argv=None) -> int:
     ap.add_argument("--objective", default="cycles",
                     choices=["cycles", "energy", "edp"],
                     help="per-layer mapping-search objective")
+    ap.add_argument("--engine", default="numpy",
+                    choices=["numpy", "jax", "scalar"],
+                    help="mapping-search scoring engine (results are "
+                         "byte-identical across engines; 'jax' needs the "
+                         "jax runtime, 'scalar' is the slow reference)")
+    ap.add_argument("--engine-bench", action="store_true",
+                    help="micro-benchmark the candidate fan-out on every "
+                         "available engine and record it in the output "
+                         "meta (implied by --engine jax)")
     ap.add_argument("--emit-dir", default=None, metavar="DIR",
                     help="emit the frontier designs' wiring classes as "
                          "structural Verilog into DIR; BENCH_dse.json "
@@ -192,6 +258,19 @@ def main(argv=None) -> int:
         enable_tracing()
 
     t0 = time.perf_counter()
+    # provenance stamp: which engine scored this sweep, under which jax —
+    # so perf trajectories across PRs/artifacts stay attributable.  jax is
+    # only probed when actually requested: plain NumPy sweeps (and their
+    # worker processes) must stay jax-free.
+    jax_version = None
+    if args.engine == "jax" or args.engine_bench:
+        from repro.core.perf_model_jax import jax_available
+        if jax_available():
+            import jax as _jax_mod
+            jax_version = _jax_mod.__version__
+        elif args.engine == "jax":
+            ap.error("--engine jax: the jax runtime is not importable in "
+                     "this environment; use --engine numpy")
     space = SPACES[args.space or ("tiny" if args.quick else "small")]
     if args.models:
         try:
@@ -288,7 +367,8 @@ def main(argv=None) -> int:
               f"  resume: no usable ledger at {ledger.path} — full sweep")
 
     evaluator = Evaluator(zoo=zoo, cache=cache, objective=args.objective,
-                          baseline="gemmini" if args.models else None)
+                          baseline="gemmini" if args.models else None,
+                          engine=args.engine)
     if args.models:
         # baselines depend only on the zoo — score them once in the parent
         # (workers recompute lazily from the same zoo, deterministically)
@@ -304,9 +384,13 @@ def main(argv=None) -> int:
         ledger=ledger, completed=completed)
     meta = {"configs": configs, "seqs": seqs, "batch": args.batch,
             "phases": list(phases), "objective": args.objective,
+            "engine": args.engine,
             "workers": args.workers, "ledger": ledger.path,
             "resume": bool(args.resume),
             "faults": plan.spec() if plan.active else None}
+    from repro.obs import provenance_record
+    provenance = provenance_record(
+        extra={"engine": args.engine, "jax": jax_version})
 
     # a SIGTERM (e.g. an OOM-killer sibling or batch-system preemption)
     # takes the same checkpoint path as Ctrl-C
@@ -327,7 +411,8 @@ def main(argv=None) -> int:
             supervisor=dict(sup.stats))
         meta["partial"] = True
         meta["total_wall_s"] = time.perf_counter() - t0
-        write_bench_json(out, partial, meta=meta, partial=True)
+        write_bench_json(out, partial, meta=meta, partial=True,
+                         provenance=provenance)
         cache.save()
         if args.trace:
             save_trace(args.trace)
@@ -352,12 +437,19 @@ def main(argv=None) -> int:
     wall = time.perf_counter() - t0
     meta.update({"strategy": result.strategy, "total_wall_s": wall,
                  "supervisor": dict(sup.stats)})
+    if args.engine == "jax" or args.engine_bench:
+        meta["engine_bench"] = engine_microbench()
+        if not args.quiet:
+            for name, row in meta["engine_bench"]["engines"].items():
+                print(f"  engine_bench {name}: "
+                      + ", ".join(f"{k}={v:.3f}" for k, v in row.items()))
     if args.models:
         write_models_json(out, result, model_ids=configs,
                           baselines=evaluator.baselines, meta=meta,
-                          artifacts=artifacts)
+                          artifacts=artifacts, provenance=provenance)
     else:
-        write_bench_json(out, result, meta=meta, artifacts=artifacts)
+        write_bench_json(out, result, meta=meta, artifacts=artifacts,
+                         provenance=provenance)
     if args.trace:
         payload = save_trace(args.trace)
         print(f"  trace: {len(payload['traceEvents'])} events -> "

@@ -94,6 +94,49 @@ python benchmarks/dse.py --space tiny --configs gemma_7b,glm4_9b \
     --out "$tmp/BENCH_dse.json" --cache-path "$tmp/cache.json"
 
 echo
+echo "== engine-parity gate: --engine numpy vs --engine jax =="
+if python -c "import jax" >/dev/null 2>&1; then
+    # separate caches: each engine must solve its own misses, and the two
+    # artifacts must still come out byte-identical on the frontier
+    python benchmarks/dse.py --quick -q --engine numpy \
+        --out "$tmp/eng_np.json" --cache-path "$tmp/eng_np_cache.json"
+    python benchmarks/dse.py --quick -q --engine jax \
+        --out "$tmp/eng_jx.json" --cache-path "$tmp/eng_jx_cache.json"
+    python - "$tmp/eng_np.json" "$tmp/eng_jx.json" <<'PY'
+import json, sys
+a, b = json.load(open(sys.argv[1])), json.load(open(sys.argv[2]))
+fa = json.dumps(a["frontier"], sort_keys=True)
+fb = json.dumps(b["frontier"], sort_keys=True)
+assert fa == fb, "frontier differs between --engine numpy and --engine jax"
+assert json.dumps(a["designs"], sort_keys=True) == \
+    json.dumps(b["designs"], sort_keys=True), \
+    "full eval scorecards differ between engines"
+# provenance must attribute each artifact to its engine (+ jax version)
+assert a["provenance"]["engine"] == "numpy", a["provenance"]
+assert b["provenance"]["engine"] == "jax" and b["provenance"]["jax"], \
+    b["provenance"]
+# the jax sweep must actually have dispatched XLA kernels
+c = b["metrics"]["counters"]
+assert c.get("mapper_batch.jax_dispatches", 0) > 0, \
+    f"jax engine never dispatched: {c}"
+assert c.get("mapper_batch.jax_compiles", 0) > 0, "no AOT compiles recorded"
+# micro-bench stamp + timing budget: a warm jitted dispatch of the
+# candidate fan-out must beat 100ms by a wide margin (observed ~4ms)
+eb = b["meta"]["engine_bench"]
+warm = eb["engines"]["jax"]["warm_ms"]
+assert warm < 100.0, f"jitted micro-bench too slow: {warm:.1f}ms (budget 100ms)"
+print(f"engine parity OK: frontier byte-identical "
+      f"({len(a['frontier'])} designs); jax {b['provenance']['jax']}, "
+      f"{c['mapper_batch.jax_dispatches']:.0f} dispatches / "
+      f"{c['mapper_batch.jax_compiles']:.0f} compiles, "
+      f"warm fan-out {warm:.1f}ms over {eb['candidates']} candidates")
+PY
+else
+    echo "NOTICE: jax runtime not importable - engine-parity gate SKIPPED"
+    echo "        (numpy remains the default engine; install jax to enable)"
+fi
+
+echo
 echo "== cross-model sweep budget: --models all --quick under 60s =="
 start=$SECONDS
 python benchmarks/dse.py --models all --quick -q \

@@ -14,13 +14,18 @@ candidates, which is what let the default flip on.
 Candidate enumeration (:func:`enumerate_candidates`) is shared between two
 evaluation engines:
 
-``engine="batch"`` (default)
+``engine="numpy"`` (default; alias ``"batch"``)
     the NumPy-vectorized engine in :mod:`repro.core.mapper_batch` — the
     whole candidate set is scored in one broadcasted perf-kernel pass.
+``engine="jax"``
+    the AOT-compiled XLA port (:mod:`repro.core.perf_model_jax`) scores the
+    batch in one dispatch; selection and the reported numbers stay on the
+    NumPy path, so the returned mapping is byte-identical (see that
+    module's tolerance policy).
 ``engine="scalar"``
-    the reference candidate-at-a-time loop.  Both engines call the same
-    perf kernels, so they return bit-identical mappings; the scalar path is
-    kept as the parity oracle for tests.
+    the reference candidate-at-a-time loop.  All engines call the same
+    perf-kernel math, so they return bit-identical mappings; the scalar
+    path is kept as the parity oracle for tests.
 """
 
 from __future__ import annotations
@@ -225,15 +230,18 @@ def best_mapping(
     data_nodes_per_tensor: dict[str, int] | None = None,
     ppu_elements: float = 0.0,
     objective: str = "cycles",  # "cycles" | "energy" | "edp"
-    engine: str = "batch",      # "batch" | "scalar"
+    engine: str = "numpy",      # "numpy" | "batch" (alias) | "jax" | "scalar"
     tile_search: bool = True,
 ) -> Mapping:
-    if engine == "batch":
+    if engine in ("numpy", "batch", "jax"):
         from .mapper_batch import best_mappings
         return best_mappings(
             wl, [(dims, ppu_elements)], spatials, hw,
             data_nodes_per_tensor=data_nodes_per_tensor,
-            objective=objective, tile_search=tile_search)[0]
+            objective=objective, tile_search=tile_search, engine=engine)[0]
+    if engine != "scalar":
+        raise ValueError(f"unknown engine {engine!r} "
+                         f"(expected 'numpy', 'jax', 'scalar' or 'batch')")
 
     best: Mapping | None = None
     best_key: tuple | None = None

@@ -16,6 +16,14 @@ enumerated candidate exactly like the scalar search; only the winning
 Because the scalar perf API wraps the identical kernels (batch of one), the
 two engines return bit-identical ``(cycles, energy, dataflow)`` decisions —
 asserted by the parity suite in ``tests/test_mapper_batch.py``.
+
+``engine="jax"`` swaps the scoring pass for the AOT-compiled XLA kernel in
+:mod:`repro.core.perf_model_jax` (one fused dispatch for the whole batch).
+Selection **stays on the host**: the same stable lexsort runs over the
+JAX-scored arrays, and the per-layer winners are then re-scored through the
+NumPy kernel, so the reported :class:`LayerPerf` — and everything downstream
+of it (mapping caches, scorecards, Pareto frontiers) — is byte-identical
+across engines (``tests/test_engine_parity.py``).
 """
 
 from __future__ import annotations
@@ -110,8 +118,15 @@ def evaluate_batch(
     dims_list: list[dict[str, int]],
     ppu_list: list[float],
     data_nodes_per_tensor: dict[str, int] | None = None,
+    engine: str = "numpy",
 ) -> dict[str, np.ndarray]:
-    """Score every candidate row: one broadcasted perf-kernel pass."""
+    """Score every candidate row: one broadcasted perf-kernel pass.
+
+    ``engine="numpy"`` (alias ``"batch"``) runs the broadcasted NumPy
+    kernels; ``engine="jax"`` runs the jitted XLA port — integer-derived
+    outputs are bit-identical, ``energy_pj`` within
+    :data:`repro.core.perf_model_jax.ENERGY_RTOL` (see that module for the
+    tolerance policy)."""
     wl = batch.wl
     D = len(wl.iter_dims)
     n_layers = len(dims_list)
@@ -130,12 +145,20 @@ def evaluate_batch(
     dn = np.array([dn_row], dtype=np.int64)
     ppu = np.asarray(ppu_list, dtype=np.float64)
     lid = batch.layer_id
-    return perf_kernel(wl, hw, batch.loop_dim, batch.loop_size, batch.S,
-                       n_fus=batch.n_fus, fill=batch.fill,
-                       true_sizes=true[lid],
-                       data_nodes=np.broadcast_to(
-                           dn, (batch.n_candidates, dn.shape[1])),
-                       ppu_elements=ppu[lid])
+    if engine in ("numpy", "batch"):
+        kernel = perf_kernel
+    elif engine == "jax":
+        from .perf_model_jax import perf_kernel_jax
+        kernel = perf_kernel_jax
+    else:
+        raise ValueError(f"unknown engine {engine!r} "
+                         f"(expected 'numpy', 'jax' or 'batch')")
+    return kernel(wl, hw, batch.loop_dim, batch.loop_size, batch.S,
+                  n_fus=batch.n_fus, fill=batch.fill,
+                  true_sizes=true[lid],
+                  data_nodes=np.broadcast_to(
+                      dn, (batch.n_candidates, dn.shape[1])),
+                  ppu_elements=ppu[lid])
 
 
 def _argbest(cycles: np.ndarray, energy: np.ndarray, objective: str) -> int:
@@ -158,6 +181,7 @@ def best_mappings(
     data_nodes_per_tensor: dict[str, int] | None = None,
     objective: str = "cycles",
     tile_search: bool = True,
+    engine: str = "numpy",
 ) -> list[Mapping]:
     """Best mapping for every ``(dims, ppu_elements)`` query of one workload.
 
@@ -165,23 +189,68 @@ def best_mappings(
     DSE evaluator's per-workload-kind shape), so their candidate sets are
     concatenated and scored in a single kernel pass; argmin runs per layer
     slice.  Only winners become :class:`Dataflow`/:class:`Mapping` objects.
+
+    With ``engine="jax"`` the candidate scores come from one XLA dispatch;
+    the stable-lexsort selection runs on the host either way, and the
+    per-layer winners are re-scored through the NumPy kernel so the returned
+    :class:`Mapping` is byte-identical to the ``engine="numpy"`` result.
     """
     dims_list = [q[0] for q in queries]
     ppu_list = [float(q[1]) for q in queries]
     batch = build_batch(wl, dims_list, spatials, hw, tile_search=tile_search)
     r = evaluate_batch(batch, hw, dims_list, ppu_list,
-                       data_nodes_per_tensor=data_nodes_per_tensor)
+                       data_nodes_per_tensor=data_nodes_per_tensor,
+                       engine=engine)
     METRICS.counter("mapper.batch_solves").inc()
     METRICS.counter("mapper.layers_solved").inc(len(queries))
     METRICS.counter("mapper.candidates_scored").inc(batch.n_candidates)
-    out: list[Mapping] = []
+    winners: list[int] = []
     for li in range(len(queries)):
         lo, hi = int(batch.offsets[li]), int(batch.offsets[li + 1])
         assert hi > lo, "no feasible mapping"
-        w = lo + _argbest(r["cycles"][lo:hi], r["energy_pj"][lo:hi],
-                          objective)
+        winners.append(lo + _argbest(r["cycles"][lo:hi],
+                                     r["energy_pj"][lo:hi], objective))
+    rows = winners
+    if engine == "jax":
+        # report NumPy-exact numbers for the winners (a batch of n_layers
+        # rows — negligible next to the candidate fan-out): float-ulp drift
+        # in the XLA energies can never leak into caches or frontiers
+        r = _rescore_rows(batch, r, winners, hw, dims_list, ppu_list,
+                          data_nodes_per_tensor)
+        rows = list(range(len(queries)))  # rescored row li = winner of li
+    out: list[Mapping] = []
+    for li, w in enumerate(winners):
         cand = batch.candidates[w]
         out.append(Mapping(materialize(wl, cand, spatials),
-                           LayerPerf.from_kernel(r, w),
+                           LayerPerf.from_kernel(r, rows[li]),
                            spatials[cand.spatial_idx]))
     return out
+
+
+def _rescore_rows(batch: CandidateBatch, r: dict, rows: list[int],
+                  hw: HWConfig, dims_list, ppu_list,
+                  data_nodes_per_tensor) -> dict[str, np.ndarray]:
+    """NumPy ``perf_kernel`` over a row subset of ``batch`` (the per-layer
+    winners of a JAX-scored pass), keeping the candidate row encoding."""
+    wl = batch.wl
+    idx = np.asarray(rows, dtype=np.int64)
+    D = len(wl.iter_dims)
+    n_layers = len(dims_list)
+    true = np.full((n_layers, D), NO_TRUE_SIZE, dtype=np.int64)
+    for li, dims in enumerate(dims_list):
+        for i, d in enumerate(wl.iter_dims):
+            if d in dims:
+                true[li, i] = dims[d]
+    if data_nodes_per_tensor is None:
+        dn_row = [hw.n_fus for _ in wl.tensors]
+    else:
+        dn_row = [data_nodes_per_tensor.get(t.name, hw.n_fus)
+                  for t in wl.tensors]
+    dn = np.broadcast_to(np.array([dn_row], dtype=np.int64),
+                         (len(rows), len(dn_row)))
+    ppu = np.asarray(ppu_list, dtype=np.float64)
+    lid = batch.layer_id[idx]
+    return perf_kernel(wl, hw, batch.loop_dim[idx], batch.loop_size[idx],
+                       batch.S[idx], n_fus=batch.n_fus[idx],
+                       fill=batch.fill[idx], true_sizes=true[lid],
+                       data_nodes=dn, ppu_elements=ppu[lid])

@@ -1,0 +1,318 @@
+"""JAX-jitted port of the perf-model kernels (``engine="jax"``).
+
+The NumPy kernels in :mod:`repro.core.perf_model` score one candidate batch
+per Python call; at the ROADMAP's 10⁵–10⁶-design sweep scale the remaining
+cost is the per-batch NumPy interpreter overhead and the lost opportunity to
+fuse the whole extents → footprint → traffic → perf chain into one compiled
+dispatch.  This module re-expresses the same math as a **per-candidate JAX
+function vmapped over the candidate axis** and AOT-compiles it with
+``jax.jit``, so an entire design×mapping×layer tensor scores in a single
+XLA dispatch — the affine-representation-is-just-arrays property the LEGO
+front end is built on.
+
+Contract with the NumPy engine (the differential-testing harness in
+``tests/test_engine_parity.py`` pins all of this):
+
+* every integer-derived quantity (cycles, MACs, utilization, DRAM bytes,
+  SRAM reads, PPU cycles, the memory-bound flag) is **bit-identical** —
+  all reductions (``prod``/``cumprod``/``einsum``) run in int64 exactly
+  like NumPy, and the float steps are elementwise IEEE ops;
+* ``energy_pj`` may differ by float-associativity noise (XLA is free to
+  contract multiply-adds into FMAs), bounded by :data:`ENERGY_RTOL`;
+* selection therefore never trusts JAX floats for the *reported* numbers:
+  :func:`repro.core.mapper_batch.best_mappings` uses the JAX scores only to
+  order candidates (host-side stable lexsort, identical code path) and
+  re-scores the per-layer winners through the NumPy kernel, so mapping
+  caches, scorecards and Pareto frontiers are byte-identical across
+  engines.
+
+JAX is imported lazily and only on first use: DSE worker processes stay
+NumPy-only unless ``engine="jax"`` is actually requested, and environments
+without jax degrade to a clear error (guard with :func:`jax_available`).
+float64 semantics come from the ``jax.experimental.enable_x64`` scoped
+override, not the global flag, so co-resident float32 Pallas kernels keep
+their dtypes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.obs import METRICS, span
+
+from .cost import DRAM_PJ_PER_BYTE, sram_read_pj_per_byte
+from .perf_model import HWConfig
+from .workload import Workload
+
+__all__ = ["jax_available", "perf_kernel_jax", "ENERGY_RTOL",
+           "clear_compile_cache", "ENGINES"]
+
+# the engines a mapping query can be solved with ("numpy" is the batched
+# default; "batch" is its historical alias; "scalar" is the reference
+# candidate-at-a-time oracle)
+ENGINES = ("numpy", "jax", "scalar")
+
+# tolerance policy for float energies (everything else is exact): XLA may
+# contract a*b+c chains into FMAs, so the energy sum can differ from NumPy
+# in the last ulps.  1e-9 relative is ~6 orders of magnitude looser than
+# observed drift and ~6 tighter than any mapping-relevant energy gap.
+ENERGY_RTOL = 1e-9
+
+_jax = None          # module cache: None = not tried, False = unavailable
+_COMPILED: dict[tuple, object] = {}
+
+
+def jax_available() -> bool:
+    """True iff the jax runtime can be imported (lazily probed once)."""
+    return _import_jax() is not None
+
+
+def _import_jax():
+    global _jax
+    if _jax is None:
+        try:
+            import jax  # deferred: keep NumPy-only processes jax-free
+            _jax = jax
+        except Exception:  # pragma: no cover - environment without jax
+            _jax = False
+    return _jax or None
+
+
+def _require_jax():
+    jax = _import_jax()
+    if jax is None:
+        raise RuntimeError(
+            "engine='jax' requested but the jax runtime is not importable; "
+            "install jax or use engine='numpy'")
+    return jax
+
+
+def clear_compile_cache() -> None:
+    """Drop all AOT-compiled kernels (tests / memory pressure)."""
+    _COMPILED.clear()
+
+
+def _bucket_c(c: int) -> int:
+    """Pad the candidate axis to the next power of two so the compile cache
+    stays O(log batch-size) instead of one entry per candidate count."""
+    n = 1
+    while n < c:
+        n *= 2
+    return n
+
+
+def _bucket_l(length: int) -> int:
+    """Pad the temporal-loop axis to a multiple of 4 (padding slots are
+    inert by the row encoding: dim -1, size 1)."""
+    return max(4, -(-length // 4) * 4)
+
+
+def _candidate_kernel(jax, Mpos_list, b_list, dep_list, out_mask, L, D):
+    """Per-candidate scoring function over the static workload structure.
+
+    Mirrors ``extents_kernel → footprint_kernel → traffic_kernel →
+    perf_kernel`` from :mod:`repro.core.perf_model` for one candidate row;
+    every reduction stays in int64 so the integer-derived outputs are
+    bit-identical to the NumPy engine.
+    """
+    jnp = jax.numpy
+    T = len(Mpos_list)
+
+    def kernel(loop_dim, loop_size, S, n_fus, fill, true_sizes, data_nodes,
+               ppu_elements, budget, db, bytes_per_cycle, n_ppus_f,
+               e_mac_pj, e_reg_pj_per_byte, e_ppu_pj, static_pj_per_cycle,
+               sram_pj_per_byte, data_bytes_f):
+        # extents: per-dim iteration extent at every temporal depth (L+1, D)
+        onehot = loop_dim[:, None] == jnp.arange(D, dtype=jnp.int64)
+        G = jnp.where(onehot, loop_size[:, None], jnp.int64(1))
+        suffix = jnp.cumprod(G[::-1, :], axis=0)[::-1, :]
+        E = S[None, :] * jnp.concatenate(
+            [suffix, jnp.ones((1, D), dtype=jnp.int64)], axis=0)
+
+        sizes_full = E[0, :]
+        padded_macs = jnp.prod(sizes_full).astype(jnp.float64)
+        true_macs = jnp.prod(
+            jnp.minimum(true_sizes, sizes_full)).astype(jnp.float64)
+        util = true_macs / padded_macs
+
+        compute_cycles = jnp.prod(loop_size).astype(jnp.float64) + fill
+
+        # traffic per tensor: smallest resident level, replay outside it
+        real = loop_dim >= 0
+        pre = jnp.concatenate(
+            [jnp.ones((1,), dtype=jnp.int64),
+             jnp.cumprod(loop_size)]).astype(jnp.float64)
+        lvl_of = jnp.arange(L)
+        dram_bytes = jnp.float64(0.0)
+        sram_reads = jnp.float64(0.0)
+        for k in range(T):
+            Mpos = jnp.asarray(Mpos_list[k])
+            bvec = jnp.asarray(b_list[k])
+            mx = jnp.einsum("rd,ld->lr", Mpos, E - 1) + bvec
+            fp = jnp.prod(mx + 1, axis=1).astype(jnp.float64) * db[k]
+            fits = fp <= budget[k]
+            lvl = jnp.where(fits.any(), jnp.argmax(fits), L)
+            traffic = fp[lvl] * pre[lvl]
+            if out_mask[k]:
+                dep = jnp.asarray(dep_list[k])
+                nondep = real & ~dep[jnp.clip(loop_dim, 0, None)]
+                spills = (nondep & (lvl_of < lvl)).any()
+                traffic = traffic * jnp.where(spills, 2.0, 1.0)
+            dram_bytes = dram_bytes + traffic
+            sram_reads = sram_reads + \
+                compute_cycles * jnp.minimum(data_nodes[k], n_fus) * db[k]
+        mem_cycles = dram_bytes / bytes_per_cycle
+
+        ppu_cycles = ppu_elements / n_ppus_f
+        cycles = jnp.maximum(compute_cycles, mem_cycles) + ppu_cycles
+        memory_bound = mem_cycles > compute_cycles
+
+        sram_pj = sram_pj_per_byte * sram_reads
+        link_pj = e_reg_pj_per_byte * compute_cycles * n_fus * data_bytes_f
+        energy = (true_macs * e_mac_pj
+                  + sram_pj + link_pj
+                  + dram_bytes * DRAM_PJ_PER_BYTE
+                  + ppu_elements * e_ppu_pj
+                  + static_pj_per_cycle * cycles)
+        return {"cycles": cycles, "macs": true_macs, "utilization": util,
+                "dram_bytes": dram_bytes, "sram_reads": sram_reads,
+                "energy_pj": energy, "memory_bound": memory_bound,
+                "ppu_cycles": ppu_cycles}
+
+    return kernel
+
+
+def _compiled_kernel(jax, wl: Workload, C: int, L: int):
+    """AOT-compiled vmapped kernel for (workload structure, padded shapes).
+
+    HW parameters are runtime arguments, so one compilation serves every
+    design point of a sweep; the cache key is only the workload name and
+    the bucketed batch shape.  The compile-vs-execute split is observable:
+    ``mapper_batch.jax_compiles`` + the ``mapper_batch.jax_compile`` span
+    cover compilation, ``mapper_batch.jax_dispatches`` the warm dispatches.
+    """
+    D = len(wl.iter_dims)
+    T = len(wl.tensors)
+    key = (wl.name, C, L)
+    fn = _COMPILED.get(key)
+    if fn is not None:
+        return fn
+
+    Mpos_list = [np.clip(t.fmap.M, 0, None).astype(np.int64)
+                 for t in wl.tensors]
+    b_list = [np.asarray(t.fmap.b, dtype=np.int64) for t in wl.tensors]
+    dep_list = [t.fmap.M.any(axis=0) for t in wl.tensors]
+    out_mask = [t.role == "output" for t in wl.tensors]
+
+    kernel = _candidate_kernel(jax, Mpos_list, b_list, dep_list, out_mask,
+                               L, D)
+    # vmap over the candidate axis; HW scalars/vectors broadcast (None)
+    batched = jax.vmap(kernel,
+                       in_axes=(0, 0, 0, 0, 0, 0, None, 0,
+                                None, None, None, None, None, None, None,
+                                None, None, None))
+
+    sds = jax.ShapeDtypeStruct
+    f64 = np.dtype(np.float64)
+    shapes = (
+        sds((C, L), np.int64), sds((C, L), np.int64), sds((C, D), np.int64),
+        sds((C,), np.int64), sds((C,), f64), sds((C, D), np.int64),
+        sds((T,), np.int64), sds((C,), f64),
+        sds((T,), f64), sds((T,), f64), sds((), f64), sds((), f64),
+        sds((), f64), sds((), f64), sds((), f64), sds((), f64), sds((), f64),
+        sds((), f64),
+    )
+    t0 = time.perf_counter()
+    with span("mapper_batch.jax_compile", cat="mapper", workload=wl.name,
+              candidates=C, loops=L):
+        from jax.experimental import enable_x64
+        with enable_x64():
+            fn = jax.jit(batched).lower(*shapes).compile()
+    METRICS.counter("mapper_batch.jax_compiles").inc()
+    METRICS.histogram("mapper_batch.jax_compile_s").observe(
+        time.perf_counter() - t0)
+    _COMPILED[key] = fn
+    return fn
+
+
+def _pad_rows(a: np.ndarray, C: int) -> np.ndarray:
+    """Pad the candidate axis by repeating row 0 — padded rows are scored
+    and discarded, never selected."""
+    if a.shape[0] < C:
+        a = np.concatenate(
+            [a, np.broadcast_to(a[:1], (C - a.shape[0],) + a.shape[1:])],
+            axis=0)
+    return np.ascontiguousarray(a)
+
+
+def perf_kernel_jax(
+    wl: Workload,
+    hw: HWConfig,
+    loop_dim: np.ndarray,
+    loop_size: np.ndarray,
+    S: np.ndarray,
+    n_fus: np.ndarray,
+    fill: np.ndarray,
+    true_sizes: np.ndarray,
+    data_nodes: np.ndarray,
+    ppu_elements: np.ndarray,
+) -> dict[str, np.ndarray]:
+    """Drop-in JAX replacement for :func:`repro.core.perf_model.perf_kernel`.
+
+    Same candidate row encoding, same result keys; the whole batch scores in
+    one XLA dispatch.  ``data_nodes`` rows must be identical across the
+    batch (the mapper-batch invariant: one data-node vector per query set) —
+    asserted, because the vmapped kernel broadcasts a single ``(T,)`` row.
+    Results come back as host NumPy arrays sliced to the true batch size.
+    """
+    jax = _require_jax()
+    C, L = loop_size.shape
+    if C == 0:
+        from .perf_model import perf_kernel
+        return perf_kernel(wl, hw, loop_dim, loop_size, S, n_fus, fill,
+                           true_sizes, data_nodes, ppu_elements)
+    assert (data_nodes == data_nodes[0]).all(), \
+        "engine='jax' expects one shared data-node row per batch"
+    Cp, Lp = _bucket_c(C), _bucket_l(L)
+
+    tensors = list(wl.tensors)
+    budget = np.full(len(tensors), hw.buffer_bytes / len(tensors),
+                     dtype=np.float64)
+    db = np.array([hw.acc_bytes if t.role == "output" else hw.data_bytes
+                   for t in tensors], dtype=np.float64)
+
+    ld = np.full((Cp, Lp), -1, dtype=np.int64)
+    ld[:C, :L] = loop_dim
+    ls = np.ones((Cp, Lp), dtype=np.int64)
+    ls[:C, :L] = loop_size
+    if Cp > C:  # padded rows replay row 0 (scored, sliced away, never win)
+        ld[C:] = ld[0]
+        ls[C:] = ls[0]
+
+    fn = _compiled_kernel(jax, wl, Cp, Lp)
+    args = (
+        ld, ls, _pad_rows(S, Cp), _pad_rows(n_fus, Cp),
+        _pad_rows(fill.astype(np.float64), Cp), _pad_rows(true_sizes, Cp),
+        np.asarray(data_nodes[0], dtype=np.int64),
+        _pad_rows(np.asarray(ppu_elements, dtype=np.float64), Cp),
+        budget, db,
+        np.float64(hw.bytes_per_cycle), np.float64(max(1, hw.n_ppus)),
+        np.float64(hw.e_mac_pj), np.float64(hw.e_reg_pj_per_byte),
+        np.float64(hw.e_ppu_pj),
+        np.float64(hw.static_mw / hw.freq_ghz * 1e-3),  # mW·ns = pJ
+        np.float64(sram_read_pj_per_byte(hw.buffer_bytes)),
+        np.float64(hw.data_bytes),
+    )
+    t0 = time.perf_counter()
+    from jax.experimental import enable_x64
+    with span("mapper_batch.jax_execute", cat="mapper", workload=wl.name,
+              candidates=C), enable_x64():
+        out = fn(*args)
+        out = {k: np.asarray(v) for k, v in out.items()}
+    METRICS.counter("mapper_batch.jax_dispatches").inc()
+    METRICS.counter("mapper_batch.jax_candidates").inc(C)
+    METRICS.histogram("mapper_batch.jax_execute_s").observe(
+        time.perf_counter() - t0)
+    return {k: v[:C] for k, v in out.items()}

@@ -297,11 +297,15 @@ class MappingCache:
                           spatials: list[SpatialChoice], hw: HWConfig,
                           data_nodes_per_tensor: dict[str, int] | None = None,
                           ppu_elements: float = 0.0,
-                          objective: str = "cycles") -> LayerPerf:
+                          objective: str = "cycles",
+                          engine: str = "numpy") -> LayerPerf:
         """Cached ``best_mapping`` returning the winning :class:`LayerPerf`.
 
         The entry also records the winning spatial-dataflow name, retrievable
-        via :meth:`lookup_spatial`.
+        via :meth:`lookup_spatial`.  ``engine`` selects how misses are
+        solved; it is deliberately **not** part of :func:`mapping_key` —
+        every engine returns byte-identical winners, so an entry computed
+        by one engine is a valid hit for all of them.
         """
         key = mapping_key(wl, dims, spatials, hw, data_nodes_per_tensor,
                           ppu_elements, objective)
@@ -311,7 +315,7 @@ class MappingCache:
         m: Mapping = best_mapping(
             wl, dims, spatials, hw,
             data_nodes_per_tensor=data_nodes_per_tensor,
-            ppu_elements=ppu_elements, objective=objective)
+            ppu_elements=ppu_elements, objective=objective, engine=engine)
         self.put(key, {"perf": m.perf.as_dict(),
                        "spatial": m.spatial.name,
                        "dataflow": m.dataflow.name})
@@ -321,14 +325,17 @@ class MappingCache:
                            queries: list[tuple[dict, float]],
                            spatials: list[SpatialChoice], hw: HWConfig,
                            data_nodes_per_tensor: dict[str, int] | None = None,
-                           objective: str = "cycles") -> list[LayerPerf]:
+                           objective: str = "cycles",
+                           engine: str = "numpy") -> list[LayerPerf]:
         """Batched :meth:`best_mapping_perf` over ``(dims, ppu_elements)``
         queries sharing one workload/spatial-menu/data-node shape.
 
         Cache hits are answered immediately; all misses are solved in a
         single vectorized :func:`~repro.core.mapper_batch.best_mappings`
         pass — this is the DSE evaluator's per-(design, workload-kind)
-        front door.
+        front door.  ``engine`` selects the miss solver only: keys carry no
+        engine field, so caches are interchangeable across engines
+        (``engine="scalar"`` falls back to per-query reference solves).
         """
         keys = [mapping_key(wl, dims, spatials, hw, data_nodes_per_tensor,
                             ppu, objective) for dims, ppu in queries]
@@ -341,10 +348,17 @@ class MappingCache:
             else:
                 miss.append(i)
         if miss:
-            solved = best_mappings(
-                wl, [queries[i] for i in miss], spatials, hw,
-                data_nodes_per_tensor=data_nodes_per_tensor,
-                objective=objective)
+            if engine == "scalar":
+                solved = [best_mapping(
+                    wl, queries[i][0], spatials, hw,
+                    data_nodes_per_tensor=data_nodes_per_tensor,
+                    ppu_elements=queries[i][1], objective=objective,
+                    engine="scalar") for i in miss]
+            else:
+                solved = best_mappings(
+                    wl, [queries[i] for i in miss], spatials, hw,
+                    data_nodes_per_tensor=data_nodes_per_tensor,
+                    objective=objective, engine=engine)
             for i, m in zip(miss, solved):
                 self.put(keys[i], {"perf": m.perf.as_dict(),
                                    "spatial": m.spatial.name,

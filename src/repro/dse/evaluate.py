@@ -32,6 +32,7 @@ scored on the unfused lowering, the paper's Fig. 10 comparison.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 from repro.core import workload as W
@@ -170,13 +171,22 @@ class Evaluator:
     def __init__(self, zoo: dict[str, list] | None = None,
                  cache: MappingCache | None = None,
                  objective: str = "cycles",
-                 baseline: str | None = None):
+                 baseline: str | None = None,
+                 engine: str = "numpy"):
         self.zoo = zoo if zoo is not None else load_zoo()
         self.cache = cache if cache is not None else MappingCache()
         self.objective = objective
         if baseline not in (None, "gemmini"):
             raise ValueError(f"unknown baseline {baseline!r}")
         self.baseline = baseline
+        from repro.core.perf_model_jax import ENGINES
+        if engine not in ENGINES and engine != "batch":
+            raise ValueError(f"unknown engine {engine!r} "
+                             f"(expected one of {ENGINES})")
+        # miss-solver selection only: mapping-cache keys carry no engine
+        # field and all engines return byte-identical winners, so a cache
+        # (or frontier) produced under one engine is valid under any other
+        self.engine = engine
         self._baselines: dict[str, dict] | None = None
 
     @property
@@ -216,9 +226,11 @@ class Evaluator:
         zoo_layers = self._zoo_layers(fused)
         # all cache-missing layer shapes of a workload kind solve in a
         # single batched query through the persistent mapping cache
+        solve = functools.partial(self.cache.best_mapping_perfs,
+                                  engine=self.engine)
         scores = score_design_over_zoo(
             zoo_layers, point.spatials, hw, objective=self.objective,
-            batch_mapping_fn=self.cache.best_mapping_perfs)
+            batch_mapping_fn=solve)
 
         # the same design point scored on the unfused per-GEMM lowering —
         # the denominator of the paper's fused-attention speedup claim.
@@ -230,7 +242,7 @@ class Evaluator:
                 {n: ls for n, ls in self._zoo_layers(False).items()
                  if has_attention_rows(self.zoo[n])},
                 point.spatials, hw, objective=self.objective,
-                batch_mapping_fn=self.cache.best_mapping_perfs)
+                batch_mapping_fn=solve)
 
         base = self.baselines
         total = DesignScore()

@@ -146,6 +146,16 @@ def build_model_graph(cfg: ModelConfig, *, seq: int = 512, batch: int = 1,
         raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
     if seq < 1 or batch < 1:
         raise ValueError(f"seq/batch must be >= 1, got seq={seq} batch={batch}")
+    has_attn = (cfg.is_encoder_decoder
+                or any(s.kind == "attn" for s in cfg.layer_pattern))
+    if has_attn and (cfg.n_kv_heads < 1
+                     or cfg.n_heads % cfg.n_kv_heads != 0):
+        # GQA shares each KV head across an integer group of query heads —
+        # a non-divisible count has no defined grouping
+        raise ValueError(
+            f"GQA requires n_heads divisible by n_kv_heads >= 1, got "
+            f"n_heads={cfg.n_heads} n_kv_heads={cfg.n_kv_heads} "
+            f"in {cfg.name}")
 
     d, hd = cfg.d_model, cfg.hd
     prefill = phase == "prefill"

@@ -1,0 +1,24 @@
+"""Shared test fixtures: one guarded hypothesis import for every suite.
+
+Test modules import the property-testing decorators from here instead of
+repeating the try/except boilerplate per file::
+
+    from conftest import HAVE_HYPOTHESIS, given, settings, st
+
+Where hypothesis is installed these are the real decorators; elsewhere the
+fallbacks in :mod:`_hypothesis_fallback` mark each property test as skipped
+(never errored) so the rest of the module still collects and runs.  Suites
+that must guarantee coverage without hypothesis (e.g. the engine-parity
+differential suite) branch on ``HAVE_HYPOTHESIS`` and fall back to
+seeded-``random`` loops.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+    HAVE_HYPOTHESIS = False
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

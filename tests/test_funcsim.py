@@ -5,11 +5,7 @@ dataflow of a fused design).  Includes hypothesis property tests."""
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-except ImportError:  # property tests skip cleanly where hypothesis is absent
-    from _hypothesis_fallback import given, settings, st
+from conftest import given, settings, st
 
 from repro.core import workload as W
 from repro.core.adg import generate_adg

@@ -8,11 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-except ImportError:  # property tests skip cleanly where hypothesis is absent
-    from _hypothesis_fallback import given, settings, st
+from conftest import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels import ref as R

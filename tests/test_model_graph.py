@@ -193,6 +193,64 @@ class TestFamilyFeatures:
         assert scores.dims["n"] == 512  # full context as the score axis
 
 
+class TestDecodeEdgeCases:
+    """Boundary shapes of the phase contract: the golden counts only pin
+    default shapes, so the seq=1 extremes need their own tests."""
+
+    def test_seq1_prefill_well_formed(self):
+        """A one-token prefill: every row must still be a valid workload
+        query (dims >= 1), attention collapses to a 1x1 score tile."""
+        g = build_model_graph(get_config("gemma_7b"), seq=1)
+        for n in g.nodes:
+            wl = _WL[n.kind]
+            assert set(n.dims) == set(wl.iter_dims), n
+            assert all(v >= 1 for v in n.dims.values()), n
+        scores = next(n for n in g.nodes if n.op == "attn_scores")
+        assert scores.dims["m"] == scores.dims["n"] == 1
+        qkv = next(n for n in g.nodes if n.op == "qkv_proj")
+        assert qkv.dims["i"] == 1  # one token through the projections
+        assert _row_macs(g.lowered()) == g.macs()
+
+    def test_first_decode_step_minimal_context(self):
+        """The first decode step after a single prompt token (seq=1, no
+        prefix) is the smallest legal KV context: a pure GEMV stack with a
+        1-element score axis."""
+        g = build_model_graph(get_config("gemma_7b"), seq=1, phase="decode",
+                              lm_head=False)
+        assert all(n.dims["i"] == 1 for n in g.nodes if n.kind == "gemm")
+        scores = next(n for n in g.nodes if n.op == "attn_scores")
+        assert scores.dims["m"] == 1 and scores.dims["n"] == 1
+        ctx = next(n for n in g.nodes if n.op == "attn_context")
+        assert ctx.dims["n"] == 1  # context of exactly one cached token
+
+    def test_zero_context_decode_rejected(self):
+        """KV-context=0 has no attention semantics: the seq >= 1 contract
+        rejects it for both phases instead of lowering a 0-dim workload."""
+        cfg = get_config("gemma_7b", reduced=True)
+        for phase in PHASES:
+            with pytest.raises(ValueError):
+                build_model_graph(cfg, seq=0, phase=phase)
+
+    def test_gqa_nondivisible_head_count_rejected(self):
+        """GQA shares each KV head across an integer group of query heads —
+        12 % 5 != 0 has no defined grouping and must be rejected up front,
+        not lowered into a silently wrong KV projection."""
+        with pytest.raises(ValueError, match="n_kv_heads"):
+            build_model_graph(ModelConfig(n_heads=12, n_kv_heads=5), seq=8)
+        with pytest.raises(ValueError, match="n_kv_heads"):
+            build_model_graph(ModelConfig(n_heads=8, n_kv_heads=0), seq=8)
+        # divisible grouping (MQA included) stays accepted
+        for kv in (1, 2, 4, 12):
+            g = build_model_graph(ModelConfig(n_heads=12, n_kv_heads=kv),
+                                  seq=8)
+            assert g.n_nodes
+        # attention-free patterns don't consult the head counts at all
+        g = build_model_graph(
+            ModelConfig(layer_pattern=(BlockSpec(kind="rwkv"),),
+                        n_heads=12, n_kv_heads=5), seq=8)
+        assert g.n_nodes
+
+
 class TestHandListParity:
     """The hand-maintained transformer tables that lived in
     benchmarks/nn_workloads.py before the frontend existed, pinned: their
