@@ -67,9 +67,9 @@ from repro.configs import ARCH_IDS, resolve_ids
 from repro.dse import (Evaluator, FaultPlan, MappingCache, RunLedger,
                        SPACES, Supervisor, SupervisorConfig,
                        corrupt_cache_file, format_frontier, format_models,
-                       format_scorecard, load_zoo, pareto_frontier,
-                       parse_fault_spec, plan_from_env, run_search,
-                       write_bench_json, write_models_json)
+                       format_scorecard, format_serving, load_zoo,
+                       pareto_frontier, parse_fault_spec, plan_from_env,
+                       run_search, write_bench_json, write_models_json)
 from repro.dse.evaluate import DEFAULT_ZOO
 from repro.dse.search import SearchResult
 from repro.frontend import PHASES
@@ -218,8 +218,23 @@ def main(argv=None) -> int:
                     help="auto strategy: exhaustive up to this many raw "
                          "points, evolutionary beyond")
     ap.add_argument("--objective", default="cycles",
-                    choices=["cycles", "energy", "edp"],
-                    help="per-layer mapping-search objective")
+                    choices=["cycles", "energy", "edp", "serving"],
+                    help="per-layer mapping-search objective; 'serving' "
+                         "replays a synthetic traffic trace against every "
+                         "design (repro.serve.sim) and ranks the frontier "
+                         "by goodput-under-SLO instead of static cycles")
+    ap.add_argument("--trace-spec", default=None, metavar="SPEC",
+                    help="serving traffic mix, e.g. 'seed=0,requests=64,"
+                         "rate=0.25,models=gemma_7b:2;rwkv6_7b:1,"
+                         "prompt=64:256,output=16:64' (see docs/SERVING.md; "
+                         "models default to the swept configs, requests "
+                         "default to 16 with --quick else 64)")
+    ap.add_argument("--slo-ms", default="30000:1500", metavar="TTFT:TPOT",
+                    help="serving SLO bounds in ms — time-to-first-token : "
+                         "time-per-output-token (default 30000:1500)")
+    ap.add_argument("--kv-gb", type=float, default=4.0, metavar="GB",
+                    help="KV-cache capacity modeled by the serving "
+                         "simulator (default 4.0 GiB)")
     ap.add_argument("--engine", default="numpy",
                     choices=["numpy", "jax", "scalar"],
                     help="mapping-search scoring engine (results are "
@@ -295,6 +310,38 @@ def main(argv=None) -> int:
         ap.error(f"--seq expects a comma list of ints, got {args.seq!r}")
     if not seqs or any(s <= 0 for s in seqs):
         ap.error(f"--seq expects positive lengths, got {args.seq!r}")
+    # --objective serving: the mapping search still optimizes cycles per
+    # layer; the *design ranking* comes from the traffic-trace replay
+    serving_spec = None
+    map_objective = args.objective
+    if args.objective == "serving":
+        from repro.serve import SLO, ServingSpec, parse_trace_spec
+        map_objective = "cycles"
+        text = (args.trace_spec if args.trace_spec is not None
+                else f"requests={16 if args.quick else 64}")
+        try:
+            trace_spec = parse_trace_spec(text, default_models=configs)
+        except ValueError as e:
+            ap.error(f"--trace-spec: {e}")
+        bad = [m for m, _ in trace_spec.models if m not in ARCH_IDS]
+        if bad:
+            ap.error(f"--trace-spec names unknown configs {bad}; "
+                     f"known ids: {', '.join(ARCH_IDS)}")
+        parts = args.slo_ms.split(":")
+        try:
+            ttft, tpot = ((float(parts[0]), float(parts[1]))
+                          if len(parts) == 2 else (None, None))
+        except ValueError:
+            ttft = tpot = None
+        if ttft is None or ttft <= 0 or tpot <= 0:
+            ap.error(f"--slo-ms expects 'TTFT:TPOT' in positive ms, got "
+                     f"{args.slo_ms!r}")
+        serving_spec = ServingSpec(
+            trace=trace_spec, slo=SLO(ttft_ms=ttft, tpot_ms=tpot),
+            kv_capacity_bytes=int(args.kv_gb * (1 << 30)),
+            reduced=args.reduced)
+    elif args.trace_spec is not None:
+        ap.error("--trace-spec requires --objective serving")
     out = args.out or os.path.join(
         _ROOT, "BENCH_models.json" if args.models else "BENCH_dse.json")
     log = (lambda m: None) if args.quiet else (
@@ -355,7 +402,9 @@ def main(argv=None) -> int:
     run_key = {"space": space.name, "configs": configs, "seqs": seqs,
                "batch": args.batch, "phases": list(phases),
                "objective": args.objective, "nets": args.nets,
-               "models": bool(args.models)}
+               "models": bool(args.models),
+               "serving": (serving_spec.as_dict() if serving_spec
+                           else None)}
     ledger = RunLedger(args.ledger or out + ".ledger", run_key=run_key)
     completed = {}
     if args.resume:
@@ -366,9 +415,14 @@ def main(argv=None) -> int:
               f"from {ledger.path}" if loaded else
               f"  resume: no usable ledger at {ledger.path} — full sweep")
 
-    evaluator = Evaluator(zoo=zoo, cache=cache, objective=args.objective,
+    evaluator = Evaluator(zoo=zoo, cache=cache, objective=map_objective,
                           baseline="gemmini" if args.models else None,
-                          engine=args.engine)
+                          engine=args.engine, serving=serving_spec)
+    if serving_spec is not None:
+        print(f"  serving: trace '{serving_spec.trace.spec()}', SLO "
+              f"ttft<={serving_spec.slo.ttft_ms:g}ms "
+              f"tpot<={serving_spec.slo.tpot_ms:g}ms, "
+              f"KV {args.kv_gb:g} GiB")
     if args.models:
         # baselines depend only on the zoo — score them once in the parent
         # (workers recompute lazily from the same zoo, deterministically)
@@ -384,6 +438,7 @@ def main(argv=None) -> int:
         ledger=ledger, completed=completed)
     meta = {"configs": configs, "seqs": seqs, "batch": args.batch,
             "phases": list(phases), "objective": args.objective,
+            "serving": serving_spec.as_dict() if serving_spec else None,
             "engine": args.engine,
             "workers": args.workers, "ledger": ledger.path,
             "resume": bool(args.resume),
@@ -429,6 +484,9 @@ def main(argv=None) -> int:
     if args.models:
         print()
         print(format_models(result))
+    if serving_spec is not None:
+        print()
+        print(format_serving(result))
 
     artifacts = None
     if args.emit_dir:

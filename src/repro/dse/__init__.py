@@ -19,7 +19,8 @@ from .evaluate import (DesignEval, Evaluator, gemmini_zoo_baseline, load_zoo,
 from .faults import (FaultPlan, corrupt_cache_file, parse_fault_spec,
                      plan_from_env)
 from .report import (cross_model_winner, format_frontier, format_models,
-                     format_scorecard, write_bench_json, write_models_json)
+                     format_scorecard, format_serving, write_bench_json,
+                     write_models_json)
 from .search import (SearchResult, dominates, evolutionary_search,
                      exhaustive_search, pareto_frontier, run_search)
 from .space import DATAFLOW_SETS, SPACES, DesignPoint, DesignSpace
@@ -34,6 +35,7 @@ __all__ = [
     "evolutionary_search", "run_search", "SearchResult",
     "Supervisor", "SupervisorConfig", "RunLedger",
     "FaultPlan", "parse_fault_spec", "plan_from_env", "corrupt_cache_file",
-    "format_frontier", "format_scorecard", "write_bench_json",
-    "cross_model_winner", "format_models", "write_models_json",
+    "format_frontier", "format_scorecard", "format_serving",
+    "write_bench_json", "cross_model_winner", "format_models",
+    "write_models_json",
 ]

@@ -44,6 +44,8 @@ from repro.frontend import (has_attention_rows, lower_model,
 from repro.frontend import lower_zoo as _frontend_lower_zoo
 from repro.models.common import ModelConfig
 from repro.obs import METRICS, span
+from repro.serve.sim import DecodeCostModel, ServingSpec, simulate
+from repro.serve.trace import generate_trace
 
 from .cache import MappingCache
 from .space import DesignPoint
@@ -118,6 +120,9 @@ class DesignEval:
     power_mw: float
     macs: float
     per_config: dict[str, dict] = field(default_factory=dict)
+    # serving scorecard (repro.serve.sim.ServingResult.summary()) when the
+    # evaluator replays a traffic trace against the design
+    serving: dict | None = None
     # robustness bookkeeping (repro.dse.supervisor): a point that exhausts
     # its retry budget is recorded as a failure stub, not a sweep abort
     error: str | None = None
@@ -138,7 +143,12 @@ class DesignEval:
         return self.cycles * self.energy_pj
 
     def objectives(self) -> tuple[float, float, float]:
-        """(cycles, energy, area) — the minimized Pareto axes."""
+        """The minimized Pareto axes: (cycles, energy, area) for static
+        sweeps; with a serving scorecard attached the latency axis becomes
+        traffic-mix goodput (negated — higher is better)."""
+        if self.serving is not None:
+            return (-self.serving["goodput_tps"], self.energy_pj,
+                    self.area_mm2)
         return (self.cycles, self.energy_pj, self.area_mm2)
 
     def as_dict(self) -> dict:
@@ -146,6 +156,8 @@ class DesignEval:
              "energy_pj": self.energy_pj, "area_mm2": self.area_mm2,
              "power_mw": self.power_mw, "macs": self.macs,
              "gops": self.gops, "per_config": self.per_config}
+        if self.serving is not None:
+            d["serving"] = self.serving
         if self.error is not None:
             # only failure stubs carry retry provenance in artifacts: a
             # recovered eval is bit-identical to one that never faulted
@@ -162,6 +174,7 @@ class DesignEval:
                    cycles=d["cycles"], energy_pj=d["energy_pj"],
                    area_mm2=d["area_mm2"], power_mw=d["power_mw"],
                    macs=d["macs"], per_config=d.get("per_config", {}),
+                   serving=d.get("serving"),
                    error=d.get("error"), retries=int(d.get("retries", 0)))
 
 
@@ -172,10 +185,17 @@ class Evaluator:
                  cache: MappingCache | None = None,
                  objective: str = "cycles",
                  baseline: str | None = None,
-                 engine: str = "numpy"):
+                 engine: str = "numpy",
+                 serving: ServingSpec | None = None):
         self.zoo = zoo if zoo is not None else load_zoo()
         self.cache = cache if cache is not None else MappingCache()
         self.objective = objective
+        # a ServingSpec turns every evaluation into a traffic-trace replay
+        # on top of the static scorecard: the DesignEval gains a `serving`
+        # section and its Pareto latency axis becomes goodput-under-SLO
+        self.serving = serving
+        self._serving_trace = (generate_trace(serving.trace)
+                               if serving is not None else None)
         if baseline not in (None, "gemmini"):
             raise ValueError(f"unknown baseline {baseline!r}")
         self.baseline = baseline
@@ -274,8 +294,17 @@ class Evaluator:
         power = estimate_design_power_mw(
             point.n_fus, point.buffer_bytes, n_dataflows=point.n_dataflows,
             n_ppus=point.n_ppus)
+        serving = None
+        if self.serving is not None:
+            cm = DecodeCostModel(point, cache=self.cache,
+                                 engine=self.engine,
+                                 objective=self.objective,
+                                 reduced=self.serving.reduced)
+            serving = simulate(point, self._serving_trace,
+                               spec=self.serving,
+                               cost_model=cm).summary()
         return DesignEval(point=point, cycles=total.cycles,
                           energy_pj=total.energy_pj,
                           area_mm2=area["total_mm2"],
                           power_mw=power["total_mw"], macs=total.macs,
-                          per_config=per_config)
+                          per_config=per_config, serving=serving)

@@ -13,7 +13,8 @@ from .evaluate import DesignEval
 from .search import SearchResult
 
 __all__ = ["format_scorecard", "format_frontier", "write_bench_json",
-           "cross_model_winner", "format_models", "write_models_json"]
+           "cross_model_winner", "format_models", "write_models_json",
+           "format_serving"]
 
 
 def _observability_sections(metrics: dict | None,
@@ -65,6 +66,56 @@ def format_frontier(result: SearchResult) -> str:
         lines.append(_row(e))
     for obj in ("cycles", "energy", "area", "edp"):
         lines.append(f"best[{obj:>6}]: {result.best(obj).point.name}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# serving study (traffic-driven selection: repro.serve.sim scorecards)
+# ---------------------------------------------------------------------------
+
+def _serving_section(result: SearchResult) -> dict | None:
+    """The ``serving`` artifact section: one SLO scorecard per scored
+    design plus the goodput winner.  ``None`` when the sweep ran without a
+    serving spec.  Every value is a pure function of (design, trace spec),
+    so seeded reruns must reproduce this section byte-for-byte — the
+    check.sh serving determinism gate diffs exactly this subtree."""
+    scored = [e for e in result.evals
+              if not e.failed and e.serving is not None]
+    if not scored:
+        return None
+    win = max(scored, key=lambda e: e.serving["goodput_tps"])
+    return {
+        "trace": win.serving["trace"],
+        "slo": win.serving["slo"],
+        "winner": win.point.name,
+        "designs": {e.point.name: e.serving
+                    for e in sorted(scored, key=lambda e: e.point.name)},
+    }
+
+
+def format_serving(result: SearchResult) -> str:
+    """Terminal table: per-design serving scorecard, best goodput first."""
+    scored = [e for e in result.evals
+              if not e.failed and e.serving is not None]
+    if not scored:
+        return "(no serving scorecards — run with --objective serving)"
+    hdr = (f"{'design':<34} {'goodput t/s':>11} {'SLO %':>6} "
+           f"{'p50 TTFT s':>10} {'p99 TTFT s':>10} {'p50 TPOT ms':>11} "
+           f"{'p99 TPOT ms':>11} {'preempt':>7}")
+    first = scored[0].serving
+    lines = [
+        f"== serving ({first['requests']} requests, "
+        f"trace '{first['trace']['spec']}') ==",
+        hdr, "-" * len(hdr),
+    ]
+    for e in sorted(scored, key=lambda x: -x.serving["goodput_tps"]):
+        s = e.serving
+        lines.append(
+            f"{e.point.name:<34} {s['goodput_tps']:>11.3f} "
+            f"{100 * s['slo_attainment']:>5.0f}% "
+            f"{s['p50_ttft_ms'] / 1e3:>10.2f} {s['p99_ttft_ms'] / 1e3:>10.2f} "
+            f"{s['p50_tpot_ms']:>11.1f} {s['p99_tpot_ms']:>11.1f} "
+            f"{s['preemptions']:>7}")
     return "\n".join(lines)
 
 
@@ -197,6 +248,10 @@ def write_models_json(path: str, result: SearchResult,
         "best": {obj: result.best(obj).point.name
                  for obj in ("cycles", "energy", "area", "edp")},
     }
+    serving = _serving_section(result)
+    if serving is not None:
+        payload["serving"] = serving
+        payload["best"]["goodput"] = result.best("goodput").point.name
     atomic_write_json(path, payload, indent=1)
     return payload
 
@@ -244,5 +299,9 @@ def write_bench_json(path: str, result: SearchResult,
     if result.frontier or result.evals:
         payload["best"] = {obj: result.best(obj).point.name
                            for obj in ("cycles", "energy", "area", "edp")}
+    serving = _serving_section(result)
+    if serving is not None:
+        payload["serving"] = serving
+        payload["best"]["goodput"] = result.best("goodput").point.name
     atomic_write_json(path, payload, indent=1)
     return payload

@@ -98,7 +98,11 @@ class SearchResult:
         keyfn = {"cycles": lambda e: e.cycles,
                  "energy": lambda e: e.energy_pj,
                  "area": lambda e: e.area_mm2,
-                 "edp": lambda e: e.edp}[objective]
+                 "edp": lambda e: e.edp,
+                 # traffic-mix goodput (requires serving scorecards);
+                 # minimized like every other key, hence the negation
+                 "goodput": lambda e: -(e.serving or {}).get(
+                     "goodput_tps", 0.0)}[objective]
         return min(self.frontier or self.evals, key=keyfn)
 
 

@@ -189,7 +189,8 @@ _WORKER: dict = {}
 
 
 def _init_worker(zoo, objective, warm_entries, baseline=None,
-                 trace: bool = False, faults: FaultPlan | None = None):
+                 trace: bool = False, faults: FaultPlan | None = None,
+                 serving=None):
     """Build this worker's Evaluator around a private in-memory mapping
     cache, warm-started with the parent's entries.
 
@@ -202,7 +203,8 @@ def _init_worker(zoo, objective, warm_entries, baseline=None,
     cache = MappingCache()
     cache.merge(warm_entries)  # merge bypasses the put() journal, so the
     _WORKER["ev"] = Evaluator(  # warm entries never echo back to the parent
-        zoo=zoo, cache=cache, objective=objective, baseline=baseline)
+        zoo=zoo, cache=cache, objective=objective, baseline=baseline,
+        serving=serving)
     _WORKER["faults"] = faults
 
 
@@ -438,7 +440,7 @@ class Supervisor:
         ev = self.evaluator
         return (ev.zoo, ev.objective, ev.cache.snapshot(),
                 getattr(ev, "baseline", None), tracing_enabled(),
-                self.faults)
+                self.faults, getattr(ev, "serving", None))
 
     def _spawn_worker(self) -> _Worker:
         parent_conn, child_conn = self._ctx.Pipe(duplex=True)

@@ -1,1 +1,31 @@
-from .engine import ServeConfig, build_serve_step, decode_state_shapes, generate
+"""Serving: the JAX decode engine plus the traffic-driven simulator.
+
+The engine half (:mod:`repro.serve.engine`) imports jax at module load, but
+the simulator half (:mod:`repro.serve.sim`, :mod:`repro.serve.trace`) is
+pure numpy and is imported by the DSE worker processes — which must stay
+jax-free so spawn-based pools start fast and the `numpy` scoring engine
+never silently pulls in XLA.  Engine symbols are therefore resolved lazily
+(PEP 562); trace/sim symbols are eager.
+"""
+
+from .sim import (SLO, DecodeCostModel, ServingResult, ServingSpec,
+                  StragglerEpisode, simulate)
+from .trace import (DEFAULT_TRACE_SPEC, Request, TraceSpec, generate_trace,
+                    parse_trace_spec, save_trace_json, trace_as_dicts,
+                    trace_from_dicts)
+
+_ENGINE_SYMBOLS = ("ServeConfig", "build_serve_step", "decode_state_shapes",
+                   "generate")
+
+__all__ = ["SLO", "DecodeCostModel", "ServingResult", "ServingSpec",
+           "StragglerEpisode", "simulate", "DEFAULT_TRACE_SPEC", "Request",
+           "TraceSpec", "generate_trace", "parse_trace_spec",
+           "save_trace_json", "trace_as_dicts", "trace_from_dicts",
+           *_ENGINE_SYMBOLS]
+
+
+def __getattr__(name: str):
+    if name in _ENGINE_SYMBOLS:
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -286,3 +286,31 @@ class TestEngineValidation:
         assert not pmj.jax_available()
         with pytest.raises(RuntimeError, match="jax"):
             pmj._require_jax()
+
+
+class TestServingParity:
+    """The serving simulator inherits engine invariance: a replayed trace's
+    schedule is a pure function of the mapping-search winners, which are
+    byte-identical across engines (extends tests/test_serve_sim.py)."""
+
+    @needs_jax
+    def test_serving_summary_engine_invariant(self):
+        from repro.dse.space import DesignPoint
+        from repro.serve.sim import SLO, DecodeCostModel, ServingSpec, simulate
+        from repro.serve.trace import TraceSpec, generate_trace
+
+        pt = DesignPoint(n_fus=128, buffer_kb=128, dram_gbps=64,
+                         dataflow_set="attention_fused")
+        ts = TraceSpec(seed=1, requests=6, rate_rps=1.0,
+                       models=(("gemma_7b", 1.0),), prompt_mean=8,
+                       prompt_max=32, output_mean=4, output_max=8)
+        spec = ServingSpec(trace=ts, slo=SLO(), reduced=True)
+        trace = generate_trace(ts)
+        results = {}
+        for engine in ("numpy", "jax"):
+            cm = DecodeCostModel(pt, engine=engine, reduced=True)
+            results[engine] = simulate(pt, trace, spec=spec, cost_model=cm,
+                                       record_steps=True)
+        assert results["numpy"].summary() == results["jax"].summary()
+        assert results["numpy"].steps == results["jax"].steps
+        assert results["numpy"].requests == results["jax"].requests
