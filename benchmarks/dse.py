@@ -31,6 +31,16 @@ candidate fan-out on every available engine.
 ``--seq`` accepts a comma list (e.g. ``--seq 512,4096``) to score several
 prefill lengths in one sweep; ``--space large`` defaults to ``512,4096``.
 
+``--design-batch`` goes one axis further: the sweep is tiled along the
+*design* axis (:mod:`repro.dse.batch_sweep`) and every mapping search is
+solved for a whole tile of designs in one ``(D, C)`` XLA dispatch — same
+frontier, byte for byte, an order of magnitude less mapping-solve time
+(the measured speedup lands in ``meta.engine_bench.design_batch``).  For
+spaces too big to enumerate at all (``--space huge``, ~10⁵ raw points),
+``--strategy evolve --budget N --seed S`` runs the guided
+tournament+mutation search with a cheap single-entry prefilter; the same
+seed visits the same designs and reproduces the same frontier.
+
 Re-runs hit the persistent mapping cache (``.dse_mapping_cache.json`` next to
 the output file by default) and skip the mapper entirely for already-seen
 (design, layer) pairs — worker-computed entries merge back on join.
@@ -108,7 +118,7 @@ def emit_frontier_rtl(result, out_dir: str) -> dict:
     return artifacts
 
 
-def engine_microbench(repeats: int = 5) -> dict:
+def engine_microbench(repeats: int = 5, design_axis: bool = False) -> dict:
     """Time the per-batch candidate fan-out on every available engine.
 
     One representative mapping batch (a transformer-ish GEMM fan-out) is
@@ -116,6 +126,10 @@ def engine_microbench(repeats: int = 5) -> dict:
     ``numpy`` reports the median wall time, ``jax`` reports the cold
     dispatch (compile + execute) and the warm median separately — the
     compile-vs-execute split that decides when the XLA engine pays off.
+    With ``design_axis`` (and jax present) a second section sweeps the
+    mapping solve for every design of the ``large`` space — the current
+    per-design loop versus the tiled ``(D, C)`` design-axis dispatches —
+    and records the speedup ``--design-batch`` buys at the engine level.
     Recorded under ``meta["engine_bench"]`` in ``BENCH_dse.json``.
     """
     import statistics
@@ -154,7 +168,71 @@ def engine_microbench(repeats: int = 5) -> dict:
         out["engines"]["jax"] = {
             "cold_ms": cold * 1e3,
             "warm_ms": statistics.median(timed("jax", repeats)) * 1e3}
+        if design_axis:
+            out["design_batch"] = _design_axis_bench(
+                wl, sps, dims_list, ppu_list, repeats)
     return out
+
+
+def _design_axis_bench(wl, sps, dims_list, ppu_list,
+                       repeats: int, space_name: str = "large") -> dict:
+    """Mapping-solve wall clock over every design of one space: the
+    per-design ``best_mappings`` loop (NumPy engine — today's default —
+    and warm per-design JAX dispatches) against the tiled design-axis
+    ``best_mappings_design`` path.  ``speedup_vs_numpy_loop`` is the
+    acceptance number for ``--design-batch``."""
+    import statistics
+
+    from repro.core.mapper_batch import (best_mappings, best_mappings_design,
+                                         build_batch)
+    from repro.core.perf_model_jax import clear_compile_cache
+    from repro.dse.batch_sweep import DEFAULT_TILE, plan_tiles
+    from repro.dse.space import SPACES
+
+    points = list(SPACES[space_name].enumerate())
+    queries = [(dims, ppu) for dims, ppu in zip(dims_list, ppu_list)]
+    tiles = plan_tiles(points, d_tile=DEFAULT_TILE)
+    # one candidate batch per FU count (enumeration only depends on the
+    # design through n_fus); pad every tile to the widest (C, L) so a
+    # single compiled kernel serves the whole sweep
+    batches = {}
+    for tile in tiles:
+        if tile[0].n_fus not in batches:
+            batches[tile[0].n_fus] = build_batch(
+                wl, dims_list, sps, tile[0].hw_config())
+    min_c = max(b.n_candidates for b in batches.values())
+    min_l = max(b.loop_size.shape[1] for b in batches.values())
+
+    def loop(engine):
+        t = time.perf_counter()
+        for p in points:
+            best_mappings(wl, queries, sps, p.hw_config(), engine=engine)
+        return time.perf_counter() - t
+
+    def batched():
+        t = time.perf_counter()
+        for tile in tiles:
+            best_mappings_design(
+                wl, queries, sps, [p.hw_config() for p in tile],
+                min_c=min_c, min_l=min_l, min_d=DEFAULT_TILE,
+                batch=batches[tile[0].n_fus])
+        return time.perf_counter() - t
+
+    loop_numpy_s = loop("numpy")
+    loop("jax")                      # warm the per-design kernel shapes
+    loop_jax_s = loop("jax")
+    clear_compile_cache()
+    cold_s = batched()
+    warm_s = statistics.median(batched() for _ in range(max(1, repeats - 2)))
+    return {"space": space_name, "designs": len(points),
+            "tiles": len(tiles), "d_tile": DEFAULT_TILE,
+            "layers": len(dims_list),
+            "loop_numpy_ms": loop_numpy_s * 1e3,
+            "loop_jax_warm_ms": loop_jax_s * 1e3,
+            "batched_cold_ms": cold_s * 1e3,
+            "batched_warm_ms": warm_s * 1e3,
+            "speedup_vs_numpy_loop": loop_numpy_s / warm_s,
+            "speedup_vs_jax_loop": loop_jax_s / warm_s}
 
 
 def main(argv=None) -> int:
@@ -191,7 +269,35 @@ def main(argv=None) -> int:
                     help="validate args + lower the zoo, print the sweep "
                          "plan, exit before searching")
     ap.add_argument("--strategy", default="auto",
-                    choices=["auto", "exhaustive", "evolutionary"])
+                    choices=["auto", "exhaustive", "evolutionary", "evolve"],
+                    help="search strategy: 'exhaustive' enumerates, "
+                         "'evolve' is the guided tournament+mutation loop "
+                         "for big spaces (--budget/--seed), 'evolutionary' "
+                         "is the legacy generational GA; 'auto' picks "
+                         "exhaustive up to --max-exhaustive raw points, "
+                         "evolve beyond")
+    ap.add_argument("--budget", type=int, default=64,
+                    help="evolve: full-evaluation budget — total designs "
+                         "scored, ledger-resumed points included "
+                         "(default 64)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="evolve/evolutionary RNG seed; the same seed "
+                         "visits the same designs and yields the same "
+                         "frontier (default 0)")
+    ap.add_argument("--design-batch", action="store_true",
+                    help="exhaustive sweeps only: solve mapping searches a "
+                         "design-tile at a time through the AOT JAX "
+                         "kernels — one (D, C) dispatch per tile instead "
+                         "of a per-design loop (needs the jax runtime; "
+                         "frontier stays byte-identical to a per-design "
+                         "--engine numpy sweep)")
+    ap.add_argument("--d-tile", type=int, default=32, metavar="D",
+                    help="--design-batch: designs per tile, pow2-bucketed "
+                         "into the compiled (D, C) dispatch shape "
+                         "(default 32)")
+    ap.add_argument("--snapshot-every", type=int, default=1, metavar="N",
+                    help="--design-batch: checkpoint the frontier-so-far "
+                         "into the run ledger every N tiles (default 1)")
     ap.add_argument("--workers", type=int, default=1,
                     help="process-pool fan-out for design evaluations")
     ap.add_argument("--resume", action="store_true",
@@ -278,7 +384,7 @@ def main(argv=None) -> int:
     # only probed when actually requested: plain NumPy sweeps (and their
     # worker processes) must stay jax-free.
     jax_version = None
-    if args.engine == "jax" or args.engine_bench:
+    if args.engine == "jax" or args.engine_bench or args.design_batch:
         from repro.core.perf_model_jax import jax_available
         if jax_available():
             import jax as _jax_mod
@@ -286,6 +392,20 @@ def main(argv=None) -> int:
         elif args.engine == "jax":
             ap.error("--engine jax: the jax runtime is not importable in "
                      "this environment; use --engine numpy")
+        elif args.design_batch:
+            ap.error("--design-batch needs the jax runtime (the design "
+                     "axis is an XLA vmap); drop the flag for a "
+                     "per-design sweep")
+    if args.design_batch and args.strategy not in ("auto", "exhaustive"):
+        ap.error("--design-batch is an exhaustive-sweep orchestrator; "
+                 "use --strategy auto or exhaustive (guided search wants "
+                 "--strategy evolve instead)")
+    if args.d_tile < 1:
+        ap.error(f"--d-tile expects a positive tile size, got "
+                 f"{args.d_tile}")
+    if args.budget < 1:
+        ap.error(f"--budget expects a positive evaluation count, got "
+                 f"{args.budget}")
     space = SPACES[args.space or ("tiny" if args.quick else "small")]
     if args.models:
         try:
@@ -403,6 +523,8 @@ def main(argv=None) -> int:
                "batch": args.batch, "phases": list(phases),
                "objective": args.objective, "nets": args.nets,
                "models": bool(args.models),
+               "strategy": args.strategy, "budget": args.budget,
+               "seed": args.seed,
                "serving": (serving_spec.as_dict() if serving_spec
                            else None)}
     ledger = RunLedger(args.ledger or out + ".ledger", run_key=run_key)
@@ -440,21 +562,40 @@ def main(argv=None) -> int:
             "phases": list(phases), "objective": args.objective,
             "serving": serving_spec.as_dict() if serving_spec else None,
             "engine": args.engine,
+            "design_batch": bool(args.design_batch),
+            "budget": args.budget, "seed": args.seed,
             "workers": args.workers, "ledger": ledger.path,
             "resume": bool(args.resume),
             "faults": plan.spec() if plan.active else None}
     from repro.obs import provenance_record
     provenance = provenance_record(
-        extra={"engine": args.engine, "jax": jax_version})
+        extra={"engine": args.engine, "jax": jax_version,
+               "strategy": args.strategy, "seed": args.seed,
+               "budget": args.budget,
+               "design_batch": bool(args.design_batch)})
 
     # a SIGTERM (e.g. an OOM-killer sibling or batch-system preemption)
     # takes the same checkpoint path as Ctrl-C
     signal.signal(signal.SIGTERM,
                   lambda s, f: (_ for _ in ()).throw(KeyboardInterrupt()))
     try:
-        result = run_search(space, evaluator, strategy=args.strategy,
-                            log=log, workers=args.workers, supervisor=sup,
-                            max_exhaustive=args.max_exhaustive)
+        if args.design_batch:
+            from repro.dse.batch_sweep import batch_sweep
+            result = batch_sweep(space, evaluator, workers=args.workers,
+                                 supervisor=sup, log=log,
+                                 d_tile=args.d_tile,
+                                 snapshot_every=args.snapshot_every)
+        else:
+            # seed/budget only reach the strategies that take them; 'auto'
+            # may resolve to evolve, where run_search forwards them
+            kw = ({"budget": args.budget, "seed": args.seed}
+                  if args.strategy in ("auto", "evolve")
+                  else {"seed": args.seed}
+                  if args.strategy == "evolutionary" else {})
+            result = run_search(space, evaluator, strategy=args.strategy,
+                                log=log, workers=args.workers,
+                                supervisor=sup,
+                                max_exhaustive=args.max_exhaustive, **kw)
     except KeyboardInterrupt:
         # the supervisor already flushed the ledger on its way out; leave a
         # partial artifact instead of dying with nothing
@@ -495,12 +636,24 @@ def main(argv=None) -> int:
     wall = time.perf_counter() - t0
     meta.update({"strategy": result.strategy, "total_wall_s": wall,
                  "supervisor": dict(sup.stats)})
-    if args.engine == "jax" or args.engine_bench:
-        meta["engine_bench"] = engine_microbench()
+    if args.engine == "jax" or args.engine_bench or args.design_batch:
+        # the design-axis section re-sweeps the large space at the engine
+        # level (~10s) — keep it out of the --quick gate budget
+        meta["engine_bench"] = engine_microbench(
+            design_axis=args.design_batch and not args.quick)
         if not args.quiet:
             for name, row in meta["engine_bench"]["engines"].items():
                 print(f"  engine_bench {name}: "
                       + ", ".join(f"{k}={v:.3f}" for k, v in row.items()))
+            db = meta["engine_bench"].get("design_batch")
+            if db:
+                print(f"  engine_bench design_batch: {db['designs']} "
+                      f"designs/{db['tiles']} tiles — numpy loop "
+                      f"{db['loop_numpy_ms']:.0f}ms, jax loop "
+                      f"{db['loop_jax_warm_ms']:.0f}ms, batched warm "
+                      f"{db['batched_warm_ms']:.0f}ms "
+                      f"({db['speedup_vs_numpy_loop']:.1f}x vs numpy "
+                      f"loop)")
     if args.models:
         write_models_json(out, result, model_ids=configs,
                           baselines=evaluator.baselines, meta=meta,

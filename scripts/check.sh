@@ -137,6 +137,83 @@ else
 fi
 
 echo
+echo "== design-batch gate: tiled (D, C) sweep vs per-design numpy sweep =="
+if python -c "import jax" >/dev/null 2>&1; then
+    # budget: the quick design-batched sweep (incl. its AOT warmup) plus
+    # the reference numpy sweep must stay comfortably sub-minute
+    start=$SECONDS
+    python benchmarks/dse.py --quick -q --engine numpy \
+        --out "$tmp/db_np.json" --cache-path "$tmp/db_np_cache.json"
+    python benchmarks/dse.py --quick -q --engine jax --design-batch \
+        --d-tile 2 \
+        --out "$tmp/db_jx.json" --cache-path "$tmp/db_jx_cache.json"
+    elapsed=$((SECONDS - start))
+    if [ "$elapsed" -gt 90 ]; then
+        echo "design-batch gate took ${elapsed}s (budget 90s)" >&2
+        exit 1
+    fi
+    python - "$tmp/db_np.json" "$tmp/db_jx.json" <<'PY'
+import json, sys
+a, b = json.load(open(sys.argv[1])), json.load(open(sys.argv[2]))
+# the whole point: tiling along the design axis must be invisible in the
+# artifact — frontier AND full scorecard byte-identical to the numpy loop
+assert json.dumps(a["frontier"], sort_keys=True) == \
+    json.dumps(b["frontier"], sort_keys=True), \
+    "frontier differs between per-design numpy and --design-batch sweeps"
+assert json.dumps(a["designs"], sort_keys=True) == \
+    json.dumps(b["designs"], sort_keys=True), \
+    "full eval scorecards differ under --design-batch"
+assert b["meta"]["design_batch"] is True and \
+    b["provenance"]["design_batch"] is True, "design_batch not stamped"
+c = b["metrics"]["counters"]
+assert c.get("dse.tiles_swept", 0) >= 3, f"too few tiles swept: {c}"
+assert c.get("dse.prefill_entries", 0) > 0, "prefill added no entries"
+assert c.get("mapper.design_batch_solves", 0) > 0, \
+    "no design-batched dispatches recorded"
+assert c.get("dse.frontier_snapshots", 0) > 0, \
+    "no frontier snapshots checkpointed"
+print(f"design-batch OK: {len(b['designs'])} designs in "
+      f"{c['dse.tiles_swept']:.0f} tiles, "
+      f"{c['dse.prefill_entries']:.0f} prefilled entries, "
+      f"frontier byte-identical")
+PY
+    # compile-count pin: with bucket floors carried across tiles, one
+    # workload kind must keep reusing one compiled (D, C, L) shape — more
+    # than 2 compiles across 4 same-kind tiles means the bucketing regressed
+    python - <<'PY'
+from repro.core import workload as W
+from repro.core.mapper import SpatialChoice
+from repro.core.mapper_batch import best_mappings_design
+from repro.core.perf_model import HWConfig
+from repro.core.perf_model_jax import clear_compile_cache
+from repro.obs import METRICS
+
+wl = W.gemm()
+sps = [SpatialChoice(("i", "j"), (1, 1), "ij"),
+       SpatialChoice(("k", "j"), (1, 1), "jk")]
+queries = [({"i": s, "j": 4096, "k": 2048}, 0.0) for s in (256, 512, 1024)]
+
+def compiles():
+    return METRICS.snapshot()["counters"].get("mapper_batch.jax_compiles", 0)
+
+clear_compile_cache()
+c0 = compiles()
+for t in range(4):
+    hw_list = [HWConfig(n_fus=256,
+                        buffer_bytes=(64 + 32 * t + 8 * i) * 1024,
+                        dram_gbps=8.0 + t)
+               for i in range(8)]
+    best_mappings_design(wl, queries, sps, hw_list, min_d=8)
+n = compiles() - c0
+assert n <= 2, f"{n} compiles across 4 same-kind tiles (pin: <=2)"
+print(f"design-axis compile pin OK: {n} compile(s) across 4 tiles")
+PY
+else
+    echo "NOTICE: jax runtime not importable - design-batch gate SKIPPED"
+    echo "        (per-design sweeps remain available on the numpy engine)"
+fi
+
+echo
 echo "== cross-model sweep budget: --models all --quick under 60s =="
 start=$SECONDS
 python benchmarks/dse.py --models all --quick -q \

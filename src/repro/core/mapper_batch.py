@@ -39,7 +39,8 @@ from .mapper import (Candidate, Mapping, SpatialChoice, enumerate_candidates,
 from .perf_model import NO_TRUE_SIZE, HWConfig, LayerPerf, perf_kernel
 from .workload import Workload
 
-__all__ = ["CandidateBatch", "build_batch", "evaluate_batch", "best_mappings"]
+__all__ = ["CandidateBatch", "build_batch", "evaluate_batch", "best_mappings",
+           "best_mappings_design"]
 
 
 @dataclass
@@ -224,6 +225,92 @@ def best_mappings(
         out.append(Mapping(materialize(wl, cand, spatials),
                            LayerPerf.from_kernel(r, rows[li]),
                            spatials[cand.spatial_idx]))
+    return out
+
+
+def best_mappings_design(
+    wl: Workload,
+    queries: list[tuple[dict[str, int], float]],
+    spatials: list[SpatialChoice],
+    hw_list: list[HWConfig],
+    data_nodes_per_tensor_list: list[dict[str, int] | None] | None = None,
+    objective: str = "cycles",
+    tile_search: bool = True,
+    min_c: int = 1,
+    min_l: int = 4,
+    min_d: int = 1,
+    batch: CandidateBatch | None = None,
+) -> list[list[Mapping]]:
+    """Best mappings for every query against **D design points** at once.
+
+    The design-axis twin of :func:`best_mappings`: one candidate batch is
+    enumerated (all designs must share ``n_fus`` — candidate enumeration
+    depends on the design only through the FU count, asserted here) and one
+    ``(design, candidate)`` XLA dispatch scores it against every design's
+    runtime HW parameters (:func:`perf_kernel_jax_design`).  Selection and
+    reporting follow the PR-8 engine contract per design: host-side stable
+    lexsort over the JAX scores, then the per-layer winners are re-scored
+    through the NumPy kernel, so ``result[d]`` is byte-identical to
+    ``best_mappings(..., hw_list[d], engine="jax")`` — and therefore to the
+    NumPy engine.  Returns ``result[d][q]`` (D × len(queries) mappings).
+
+    ``min_c``/``min_l``/``min_d`` forward bucket floors to the kernel so a
+    tiled sweep can pin one compiled shape across tiles.
+    """
+    from .perf_model_jax import perf_kernel_jax_design
+
+    assert hw_list, "best_mappings_design needs at least one design"
+    assert len({hw.n_fus for hw in hw_list}) == 1, \
+        "design batch must share n_fus (identical candidate enumeration)"
+    dims_list = [q[0] for q in queries]
+    ppu_list = [float(q[1]) for q in queries]
+    if batch is None:
+        batch = build_batch(wl, dims_list, spatials, hw_list[0],
+                            tile_search=tile_search)
+
+    D = len(wl.iter_dims)
+    true = np.full((len(queries), D), NO_TRUE_SIZE, dtype=np.int64)
+    for li, dims in enumerate(dims_list):
+        for i, d in enumerate(wl.iter_dims):
+            if d in dims:
+                true[li, i] = dims[d]
+    dn_rows = []
+    for di, hw in enumerate(hw_list):
+        dnt = (data_nodes_per_tensor_list[di]
+               if data_nodes_per_tensor_list else None)
+        if dnt is None:
+            dn_rows.append([hw.n_fus for _ in wl.tensors])
+        else:
+            dn_rows.append([dnt.get(t.name, hw.n_fus) for t in wl.tensors])
+    ppu = np.asarray(ppu_list, dtype=np.float64)
+    lid = batch.layer_id
+
+    r = perf_kernel_jax_design(
+        wl, hw_list, batch.loop_dim, batch.loop_size, batch.S,
+        n_fus=batch.n_fus, fill=batch.fill, true_sizes=true[lid],
+        data_nodes=np.asarray(dn_rows, dtype=np.int64),
+        ppu_elements=ppu[lid], min_c=min_c, min_l=min_l, min_d=min_d)
+    METRICS.counter("mapper.design_batch_solves").inc()
+    METRICS.counter("mapper.layers_solved").inc(len(hw_list) * len(queries))
+    METRICS.counter("mapper.candidates_scored").inc(
+        len(hw_list) * batch.n_candidates)
+
+    out: list[list[Mapping]] = []
+    for di, hw in enumerate(hw_list):
+        winners: list[int] = []
+        for li in range(len(queries)):
+            lo, hi = int(batch.offsets[li]), int(batch.offsets[li + 1])
+            assert hi > lo, "no feasible mapping"
+            winners.append(lo + _argbest(r["cycles"][di, lo:hi],
+                                         r["energy_pj"][di, lo:hi],
+                                         objective))
+        dnt = (data_nodes_per_tensor_list[di]
+               if data_nodes_per_tensor_list else None)
+        rd = _rescore_rows(batch, r, winners, hw, dims_list, ppu_list, dnt)
+        out.append([Mapping(materialize(wl, batch.candidates[w], spatials),
+                            LayerPerf.from_kernel(rd, li),
+                            spatials[batch.candidates[w].spatial_idx])
+                    for li, w in enumerate(winners)])
     return out
 
 

@@ -46,8 +46,8 @@ from .cost import DRAM_PJ_PER_BYTE, sram_read_pj_per_byte
 from .perf_model import HWConfig
 from .workload import Workload
 
-__all__ = ["jax_available", "perf_kernel_jax", "ENERGY_RTOL",
-           "clear_compile_cache", "ENGINES"]
+__all__ = ["jax_available", "perf_kernel_jax", "perf_kernel_jax_design",
+           "ENERGY_RTOL", "clear_compile_cache", "ENGINES"]
 
 # the engines a mapping query can be solved with ("numpy" is the batched
 # default; "batch" is its historical alias; "scalar" is the reference
@@ -316,3 +316,179 @@ def perf_kernel_jax(
     METRICS.histogram("mapper_batch.jax_execute_s").observe(
         time.perf_counter() - t0)
     return {k: v[:C] for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# design axis: one dispatch scores D design points × C candidates
+# ---------------------------------------------------------------------------
+
+def _compiled_design_kernel(jax, wl: Workload, Dp: int, C: int, L: int):
+    """AOT-compiled ``(design, candidate)`` double-vmapped kernel.
+
+    The outer vmap runs over the design axis with ``in_axes=None`` for every
+    candidate array, so the design-invariant chain — extents, footprints,
+    compute cycles, true MACs — is traced **once** at ``(C, …)`` shape and
+    shared by all D designs; only the footprint-vs-budget selection and the
+    energy arithmetic batch to ``(D, C)``.  That work sharing (not
+    parallelism) is where the design-batched sweep speedup comes from, which
+    matters on single-core hosts where XLA cannot fan out threads.
+
+    The cache key is ``(workload, "design", Dp, Cp, Lp)``; HW parameters are
+    runtime arguments exactly as in :func:`_compiled_kernel`, so one compile
+    serves every tile of a sweep that reuses the same bucketed shape.
+    """
+    D = len(wl.iter_dims)
+    T = len(wl.tensors)
+    key = (wl.name, "design", Dp, C, L)
+    fn = _COMPILED.get(key)
+    if fn is not None:
+        return fn
+
+    Mpos_list = [np.clip(t.fmap.M, 0, None).astype(np.int64)
+                 for t in wl.tensors]
+    b_list = [np.asarray(t.fmap.b, dtype=np.int64) for t in wl.tensors]
+    dep_list = [t.fmap.M.any(axis=0) for t in wl.tensors]
+    out_mask = [t.role == "output" for t in wl.tensors]
+
+    kernel = _candidate_kernel(jax, Mpos_list, b_list, dep_list, out_mask,
+                               L, D)
+    per_design = jax.vmap(kernel,
+                          in_axes=(0, 0, 0, 0, 0, 0, None, 0,
+                                   None, None, None, None, None, None, None,
+                                   None, None, None))
+    # outer vmap: candidate arrays broadcast (None) so the design-invariant
+    # math hoists out of the design axis; only per-design HW rows batch
+    batched = jax.vmap(per_design,
+                       in_axes=(None, None, None, None, None, None, 0, None,
+                                0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+
+    sds = jax.ShapeDtypeStruct
+    f64 = np.dtype(np.float64)
+    shapes = (
+        sds((C, L), np.int64), sds((C, L), np.int64), sds((C, D), np.int64),
+        sds((C,), np.int64), sds((C,), f64), sds((C, D), np.int64),
+        sds((Dp, T), np.int64), sds((C,), f64),
+        sds((Dp, T), f64), sds((Dp, T), f64), sds((Dp,), f64),
+        sds((Dp,), f64), sds((Dp,), f64), sds((Dp,), f64), sds((Dp,), f64),
+        sds((Dp,), f64), sds((Dp,), f64), sds((Dp,), f64),
+    )
+    t0 = time.perf_counter()
+    with span("mapper_batch.jax_compile", cat="mapper", workload=wl.name,
+              designs=Dp, candidates=C, loops=L):
+        from jax.experimental import enable_x64
+        with enable_x64():
+            fn = jax.jit(batched).lower(*shapes).compile()
+    METRICS.counter("mapper_batch.jax_compiles").inc()
+    METRICS.histogram("mapper_batch.jax_compile_s").observe(
+        time.perf_counter() - t0)
+    _COMPILED[key] = fn
+    return fn
+
+
+def _hw_rows(hw_list: list[HWConfig], tensors) -> tuple[np.ndarray, ...]:
+    """Stack the per-design runtime HW arguments into ``(D, …)`` rows, in
+    the exact argument order of :func:`_candidate_kernel`'s HW tail."""
+    T = len(tensors)
+    budget = np.array([[hw.buffer_bytes / T] * T for hw in hw_list],
+                      dtype=np.float64)
+    db = np.array([[hw.acc_bytes if t.role == "output" else hw.data_bytes
+                    for t in tensors] for hw in hw_list], dtype=np.float64)
+    return (
+        budget, db,
+        np.array([hw.bytes_per_cycle for hw in hw_list], dtype=np.float64),
+        np.array([max(1, hw.n_ppus) for hw in hw_list], dtype=np.float64),
+        np.array([hw.e_mac_pj for hw in hw_list], dtype=np.float64),
+        np.array([hw.e_reg_pj_per_byte for hw in hw_list], dtype=np.float64),
+        np.array([hw.e_ppu_pj for hw in hw_list], dtype=np.float64),
+        np.array([hw.static_mw / hw.freq_ghz * 1e-3 for hw in hw_list],
+                 dtype=np.float64),  # mW·ns = pJ
+        np.array([sram_read_pj_per_byte(hw.buffer_bytes) for hw in hw_list],
+                 dtype=np.float64),
+        np.array([float(hw.data_bytes) for hw in hw_list], dtype=np.float64),
+    )
+
+
+def perf_kernel_jax_design(
+    wl: Workload,
+    hw_list: list[HWConfig],
+    loop_dim: np.ndarray,
+    loop_size: np.ndarray,
+    S: np.ndarray,
+    n_fus: np.ndarray,
+    fill: np.ndarray,
+    true_sizes: np.ndarray,
+    data_nodes: np.ndarray,
+    ppu_elements: np.ndarray,
+    min_c: int = 1,
+    min_l: int = 4,
+    min_d: int = 1,
+) -> dict[str, np.ndarray]:
+    """Score one candidate batch against **D designs** in one XLA dispatch.
+
+    Candidate arrays are the shared ``(C, …)`` row encoding of
+    :func:`perf_kernel_jax` (all designs must enumerate the identical
+    candidate set — callers group designs by ``n_fus``); ``data_nodes`` is
+    one ``(D, T)`` row per design.  Returns ``(D, C)``-shaped host arrays.
+
+    ``min_c`` / ``min_l`` / ``min_d`` are bucket floors: a sweep
+    orchestrator passes its running per-workload maxima so every tile lands
+    on the same padded shape and the first compile serves all tiles.
+    """
+    jax = _require_jax()
+    C, L = loop_size.shape
+    Dn = len(hw_list)
+    assert Dn >= 1 and data_nodes.shape[0] == Dn
+    if C == 0:
+        from .perf_model import perf_kernel
+        return {k: np.stack([v for v in vs])
+                for k, vs in _transpose_dicts(
+                    [perf_kernel(wl, hw, loop_dim, loop_size, S, n_fus, fill,
+                                 true_sizes, np.empty((0, data_nodes.shape[1]),
+                                                      dtype=np.int64),
+                                 ppu_elements)
+                     for hw in hw_list]).items()}
+    Cp = _bucket_c(max(C, min_c))
+    Lp = _bucket_l(max(L, min_l))
+    Dp = _bucket_c(max(Dn, min_d))
+
+    ld = np.full((Cp, Lp), -1, dtype=np.int64)
+    ld[:C, :L] = loop_dim
+    ls = np.ones((Cp, Lp), dtype=np.int64)
+    ls[:C, :L] = loop_size
+    if Cp > C:  # padded rows replay row 0 (scored, sliced away, never win)
+        ld[C:] = ld[0]
+        ls[C:] = ls[0]
+
+    hw_rows = _hw_rows(hw_list, list(wl.tensors))
+    dn = np.asarray(data_nodes, dtype=np.int64)
+    # pad the design axis by repeating design 0 (scored, sliced away)
+    hw_rows = tuple(_pad_rows(a, Dp) for a in hw_rows)
+    dn = _pad_rows(dn, Dp)
+
+    fn = _compiled_design_kernel(jax, wl, Dp, Cp, Lp)
+    args = (
+        ld, ls, _pad_rows(S, Cp), _pad_rows(n_fus, Cp),
+        _pad_rows(fill.astype(np.float64), Cp), _pad_rows(true_sizes, Cp),
+        dn, _pad_rows(np.asarray(ppu_elements, dtype=np.float64), Cp),
+        *hw_rows,
+    )
+    t0 = time.perf_counter()
+    from jax.experimental import enable_x64
+    with span("mapper_batch.jax_execute", cat="mapper", workload=wl.name,
+              designs=Dn, candidates=C), enable_x64():
+        out = fn(*args)
+        out = {k: np.asarray(v) for k, v in out.items()}
+    METRICS.counter("mapper_batch.jax_dispatches").inc()
+    METRICS.counter("mapper_batch.jax_candidates").inc(Dn * C)
+    METRICS.counter("mapper_batch.jax_design_points").inc(Dn)
+    METRICS.histogram("mapper_batch.jax_execute_s").observe(
+        time.perf_counter() - t0)
+    return {k: v[:Dn, :C] for k, v in out.items()}
+
+
+def _transpose_dicts(dicts: list[dict]) -> dict[str, list]:
+    out: dict[str, list] = {}
+    for d in dicts:
+        for k, v in d.items():
+            out.setdefault(k, []).append(v)
+    return out

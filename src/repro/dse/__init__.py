@@ -13,6 +13,7 @@ cache corruption) for the robustness gates
 ``report``     — frontier pretty-printer and ``BENCH_dse.json`` writer
 """
 
+from .batch_sweep import batch_sweep, plan_tiles
 from .cache import MappingCache, atomic_write_json
 from .evaluate import (DesignEval, Evaluator, gemmini_zoo_baseline, load_zoo,
                        lower_config)
@@ -22,7 +23,8 @@ from .report import (cross_model_winner, format_frontier, format_models,
                      format_scorecard, format_serving, write_bench_json,
                      write_models_json)
 from .search import (SearchResult, dominates, evolutionary_search,
-                     exhaustive_search, pareto_frontier, run_search)
+                     evolve_search, exhaustive_search, pareto_frontier,
+                     run_search)
 from .space import DATAFLOW_SETS, SPACES, DesignPoint, DesignSpace
 from .supervisor import RunLedger, Supervisor, SupervisorConfig
 
@@ -32,7 +34,8 @@ __all__ = [
     "Evaluator", "DesignEval", "load_zoo", "lower_config",
     "gemmini_zoo_baseline",
     "pareto_frontier", "dominates", "exhaustive_search",
-    "evolutionary_search", "run_search", "SearchResult",
+    "evolutionary_search", "evolve_search", "run_search", "SearchResult",
+    "batch_sweep", "plan_tiles",
     "Supervisor", "SupervisorConfig", "RunLedger",
     "FaultPlan", "parse_fault_spec", "plan_from_env", "corrupt_cache_file",
     "format_frontier", "format_scorecard", "format_serving",

@@ -243,6 +243,13 @@ class MappingCache:
         self._journal.clear()  # persisted — nothing left to ship anywhere
 
     # -- raw access -------------------------------------------------------
+    def contains(self, key: str) -> bool:
+        """Membership probe that does **not** count toward hit/miss stats —
+        the design-batched prefill (:mod:`repro.dse.batch_sweep`) uses it to
+        plan which (design, query) entries still need solving without
+        skewing the cache telemetry the bench artifacts report."""
+        return key in self._store
+
     def get(self, key: str) -> dict | None:
         e = self._store.get(key)
         if e is None:

@@ -290,6 +290,9 @@ def write_bench_json(path: str, result: SearchResult,
         "wall_s": result.wall_s,
         "cache": result.cache_stats,
         "supervisor": result.supervisor,
+        # guided search provenance (seed, budget, visited order) — the
+        # replay recipe for `--strategy evolve` determinism checks
+        **({"search": result.extra} if result.extra else {}),
         "meta": meta or {},
         **_observability_sections(metrics, provenance),
         "artifacts": artifacts or {},

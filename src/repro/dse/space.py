@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, replace
+from typing import Iterator
 
 from repro.core.mapper import SpatialChoice
 from repro.core.perf_model import HWConfig
@@ -167,16 +168,21 @@ class DesignSpace:
                 return False
         return True
 
-    def enumerate(self) -> list[DesignPoint]:
-        pts = []
+    def enumerate(self) -> Iterator[DesignPoint]:
+        """Yield valid points lazily, in axis-product order.
+
+        A generator, not a list: the ``huge`` space has ~10⁵ raw points and
+        guided search must be able to walk (or ignore) it without ever
+        materializing the full design list.  Callers that need ``len()`` or
+        indexing wrap it in ``list(...)`` explicitly.
+        """
         for nf, bk, bw, ds in itertools.product(
                 self.n_fus, self.buffer_kb, self.dram_gbps,
                 self.dataflow_sets):
             p = DesignPoint(n_fus=nf, buffer_kb=bk, dram_gbps=bw,
                             dataflow_set=ds)
             if self.is_valid(p):
-                pts.append(p)
-        return pts
+                yield p
 
     # -- evolutionary-search hooks ---------------------------------------
     def sample(self, rng) -> DesignPoint:
@@ -239,4 +245,14 @@ SPACES: dict[str, DesignSpace] = {
         dram_gbps=(8.0, 16.0, 32.0, 64.0),
         dataflow_sets=("os", "ws", "switch", "attention_fused"),
         max_area_mm2=40.0),
+    # ~10⁵ raw points (10 × 64 × 61 × 4 = 156 160): guided-search-only
+    # territory — `--strategy evolve --budget N` walks it via sample/mutate,
+    # never enumerating the product (enumerate() stays a lazy generator)
+    "huge": DesignSpace(
+        name="huge",
+        n_fus=tuple(2 ** k for k in range(5, 15)),           # 32 .. 16384
+        buffer_kb=tuple(range(64, 4096 + 1, 64)),            # 64 .. 4096
+        dram_gbps=tuple(float(g) for g in range(4, 245, 4)),  # 4 .. 244
+        dataflow_sets=("os", "ws", "switch", "attention_fused"),
+        max_area_mm2=60.0),
 }

@@ -110,6 +110,7 @@ class RunLedger:
         self.run_key = run_key or {}
         self._evals: dict[str, dict] = {}
         self._cache_entries: dict[str, dict] = {}
+        self._frontiers: list[dict] = []
         self._dirty = False
         self.flushes = 0
 
@@ -140,6 +141,7 @@ class RunLedger:
             return 0
         self._evals = dict(payload.get("evals", {}))
         self._cache_entries = dict(payload.get("cache_entries", {}))
+        self._frontiers = list(payload.get("frontier_snapshots", []))
         return len(self._evals)
 
     def completed_evals(self) -> dict[str, DesignEval]:
@@ -169,13 +171,28 @@ class RunLedger:
             self._cache_entries.update(entries)
             self._dirty = True
 
+    def record_frontier(self, frontier: list[DesignEval]) -> None:
+        """Append one periodic frontier snapshot (long-sweep progress
+        audit): evals seen so far + the names of the current survivors.
+        :mod:`repro.dse.batch_sweep` records one every ``snapshot_every``
+        tiles, so a killed 10⁵-design run still shows how the frontier
+        converged."""
+        self._frontiers.append({"n_evals": len(self._evals),
+                                "frontier": [e.point.name for e in frontier]})
+        self._dirty = True
+        METRICS.counter("dse.frontier_snapshots").inc()
+
+    def frontier_snapshots(self) -> list[dict]:
+        return list(self._frontiers)
+
     def flush(self) -> None:
         if not self._dirty:
             return
         atomic_write_json(self.path,
                           {"schema": self.SCHEMA, "run_key": self.run_key,
                            "evals": self._evals,
-                           "cache_entries": self._cache_entries},
+                           "cache_entries": self._cache_entries,
+                           "frontier_snapshots": self._frontiers},
                           separators=(",", ":"))
         self._dirty = False
         self.flushes += 1

@@ -130,16 +130,16 @@ class TestMapperDeterminism:
 
 class TestDesignSpace:
     def test_small_space_meets_acceptance_floor(self):
-        pts = SPACES["small"].enumerate()
+        pts = list(SPACES["small"].enumerate())
         assert len(pts) >= 20
         assert len(set(p.name for p in pts)) == len(pts)
 
     def test_pruning(self):
         space = DesignSpace(name="t", n_fus=(1024,), buffer_kb=(16,),
                             min_buffer_bytes_per_fu=64)
-        assert space.enumerate() == []  # 16 KB / 1024 FUs = 16 B/FU
+        assert list(space.enumerate()) == []  # 16 KB / 1024 FUs = 16 B/FU
         space2 = DesignSpace(name="t2", n_fus=(96,))  # non-power-of-two
-        assert space2.enumerate() == []
+        assert list(space2.enumerate()) == []
 
     def test_mutate_stays_valid(self):
         space = SPACES["small"]
@@ -163,7 +163,7 @@ class TestEvaluator:
 
     def test_sweep_shape(self, tiny_result):
         result, _ = tiny_result
-        assert result.n_designs == len(SPACES["tiny"].enumerate())
+        assert result.n_designs == len(list(SPACES["tiny"].enumerate()))
         assert 1 <= len(result.frontier) <= result.n_designs
         for e in result.evals:
             assert e.cycles > 0 and e.energy_pj > 0 and e.area_mm2 > 0
@@ -231,3 +231,165 @@ class TestScoreFusedDesign:
                          data_nodes_per_tensor=dn, ppu_elements=16.0)
         assert s.cycles == pytest.approx(3 * m.perf.cycles)
         assert s.energy_pj == pytest.approx(3 * m.perf.energy_pj)
+
+
+# ---------------------------------------------------------------------------
+# guided evolve search + design-axis batched sweep
+# ---------------------------------------------------------------------------
+
+from repro.core.perf_model_jax import jax_available  # noqa: E402
+from repro.dse import (RunLedger, Supervisor, SupervisorConfig,  # noqa: E402
+                       batch_sweep, evolve_search, load_zoo, plan_tiles)
+
+needs_jax = pytest.mark.skipif(not jax_available(),
+                               reason="jax runtime not importable")
+
+_MINI_ZOO = None
+
+
+def _mini_evaluator(cache_path, engine="numpy"):
+    global _MINI_ZOO
+    if _MINI_ZOO is None:
+        _MINI_ZOO = load_zoo(["gemma_7b"], seq=64, reduced=True)
+    return Evaluator(zoo=_MINI_ZOO, cache=MappingCache(cache_path),
+                     engine=engine)
+
+
+def _dump(evals):
+    return json.dumps([e.as_dict() for e in evals], sort_keys=True)
+
+
+class TestEvolveSearch:
+    def test_deterministic_per_seed(self, tmp_path):
+        a = evolve_search(SPACES["small"], _mini_evaluator(tmp_path / "a"),
+                          budget=18, seed=5)
+        b = evolve_search(SPACES["small"], _mini_evaluator(tmp_path / "b"),
+                          budget=18, seed=5)
+        assert a.extra["visited"] == b.extra["visited"]
+        assert _dump(a.evals) == _dump(b.evals)
+        assert [e.point.name for e in a.frontier] == \
+            [e.point.name for e in b.frontier]
+        # a different seed walks a different trajectory
+        c = evolve_search(SPACES["small"], _mini_evaluator(tmp_path / "c"),
+                          budget=18, seed=6)
+        assert c.extra["visited"] != a.extra["visited"]
+
+    def test_budget_and_extra(self, tmp_path):
+        r = evolve_search(SPACES["small"], _mini_evaluator(tmp_path / "c2"),
+                          budget=12, seed=0)
+        assert r.strategy == "evolve"
+        assert r.extra["spent"] <= 12
+        assert r.n_designs == len(r.extra["visited"]) <= 12
+        assert r.extra["seed"] == 0 and r.extra["budget"] == 12
+        assert r.extra["prefilter_zoo"] == "gemma_7b"
+
+    def test_skips_failure_stub_parents(self, tmp_path):
+        """Quarantined designs (zeroed objectives) must neither win the
+        tournament nor reach the frontier."""
+        ev = _mini_evaluator(tmp_path / "f")
+        real = ev.evaluate
+        ev.evaluate = lambda p: ((_ for _ in ()).throw(ValueError("boom"))
+                                 if p.buffer_kb >= 512 else real(p))
+        sup = Supervisor(ev, cfg=SupervisorConfig(max_retries=0,
+                                                  backoff_base_s=0.0))
+        r = evolve_search(SPACES["small"], ev, budget=16, seed=2,
+                          supervisor=sup)
+        failed = [e for e in r.evals if e.failed]
+        assert failed, "corner seeding must have hit a poisoned design"
+        assert all(not e.failed for e in r.frontier)
+        assert r.extra["spent"] <= 16
+
+    def test_resume_replays_and_counts_ledger_hits(self, tmp_path):
+        ev = _mini_evaluator(tmp_path / "r1")
+        led = RunLedger(tmp_path / "led.json", run_key={"k": 1})
+        a = evolve_search(SPACES["small"], ev, budget=14, seed=4,
+                          supervisor=Supervisor(ev, ledger=led))
+
+        ev2 = _mini_evaluator(tmp_path / "r2")
+        led2 = RunLedger(tmp_path / "led.json", run_key={"k": 1})
+        assert led2.load()
+        completed = led2.completed_evals()
+        assert completed
+        b = evolve_search(SPACES["small"], ev2, budget=14, seed=4,
+                          supervisor=Supervisor(ev2, ledger=led2,
+                                                completed=completed))
+        # same trajectory, adopted from the ledger; hits count as spent
+        assert b.extra["visited"] == a.extra["visited"]
+        assert b.extra["spent"] == a.extra["spent"]
+        assert _dump(b.evals) == _dump(a.evals)
+
+    def test_run_search_routes_big_spaces_to_evolve(self, tmp_path):
+        r = run_search(SPACES["huge"], _mini_evaluator(tmp_path / "h"),
+                       strategy="auto", max_exhaustive=64,
+                       budget=10, seed=1)
+        assert r.strategy == "evolve"
+        assert r.n_designs <= 10
+
+
+class TestPlanTiles:
+    def test_partition_and_grouping(self):
+        pts = list(SPACES["small"].enumerate())
+        tiles = plan_tiles(pts, d_tile=4)
+        assert all(1 <= len(t) <= 4 for t in tiles)
+        assert sorted(p.name for t in tiles for p in t) == \
+            sorted(p.name for p in pts)
+        for t in tiles:
+            assert len({(p.n_fus, p.dataflow_set) for p in t}) == 1
+        fus = [t[0].n_fus for t in tiles]
+        assert fus == sorted(fus, reverse=True), \
+            "widest candidate batches must compile first"
+
+
+@needs_jax
+class TestBatchSweep:
+    def test_byte_identical_to_exhaustive(self, tmp_path):
+        base = run_search(SPACES["tiny"], _mini_evaluator(tmp_path / "np"),
+                          strategy="exhaustive")
+        ev = _mini_evaluator(tmp_path / "db")
+        got = batch_sweep(SPACES["tiny"], ev, workers=3, d_tile=2)
+        assert got.strategy == "exhaustive"
+        assert _dump(got.evals) == _dump(base.evals)
+        assert [e.point.name for e in got.frontier] == \
+            [e.point.name for e in base.frontier]
+        # the evaluation pass runs entirely on the prefilled cache
+        assert ev.cache.misses == 0 and ev.cache.hits > 0
+
+    def test_frontier_snapshots_checkpointed(self, tmp_path):
+        ev = _mini_evaluator(tmp_path / "s")
+        led = RunLedger(tmp_path / "led.json", run_key={"k": 1})
+        r = batch_sweep(SPACES["tiny"], ev, d_tile=2, snapshot_every=1,
+                        supervisor=Supervisor(ev, ledger=led))
+        snaps = led.frontier_snapshots()
+        assert snaps
+        assert set(snaps[-1]["frontier"]) == \
+            {e.point.name for e in r.frontier}
+        counts = [s["n_evals"] for s in snaps]
+        assert counts == sorted(counts)
+        back = RunLedger(tmp_path / "led.json", run_key={"k": 1})
+        assert back.load()
+        assert back.frontier_snapshots() == snaps
+
+    def test_resume_skips_prefill_and_eval(self, tmp_path):
+        from repro.obs import METRICS
+        ev = _mini_evaluator(tmp_path / "p1")
+        led = RunLedger(tmp_path / "led.json", run_key={"k": 2})
+        a = batch_sweep(SPACES["tiny"], ev, d_tile=2,
+                        supervisor=Supervisor(ev, ledger=led))
+
+        ev2 = _mini_evaluator(tmp_path / "p2")
+        led2 = RunLedger(tmp_path / "led.json", run_key={"k": 2})
+        assert led2.load()
+        before = METRICS.snapshot()["counters"].get("dse.prefill_entries", 0)
+        b = batch_sweep(SPACES["tiny"], ev2, d_tile=2,
+                        supervisor=Supervisor(
+                            ev2, ledger=led2,
+                            completed=led2.completed_evals()))
+        after = METRICS.snapshot()["counters"].get("dse.prefill_entries", 0)
+        assert after == before, "completed designs must skip the prefill"
+        assert _dump(b.evals) == _dump(a.evals)
+
+    def test_requires_jax(self, monkeypatch):
+        import repro.core.perf_model_jax as pmj
+        monkeypatch.setattr(pmj, "_jax", False)
+        with pytest.raises(RuntimeError, match="jax"):
+            batch_sweep(SPACES["tiny"], object())

@@ -183,6 +183,92 @@ class TestThreeEngineMappingParity:
         _assert_same_mapping(mn, mj, (wl.name, dims, obj))
 
 
+@needs_jax
+class TestDesignAxisParity:
+    """best_mappings_design: one stacked (D, C) dispatch vs D independent
+    single-design searches.  The design axis is a pure vmap over runtime HW
+    parameters, so every per-design winner (and its NumPy-rescored
+    LayerPerf) must be byte-identical to the per-design loop — per
+    objective, cold or warm compile cache."""
+
+    def _case(self, rng, n_designs=4):
+        name = rng.choice(sorted(_WLS))
+        wl = _WLS[name]
+        queries = [({d: rng.choice(_DIM_VALUES) for d in wl.iter_dims},
+                    rng.choice([0.0, 4096.0]))
+                   for _ in range(rng.choice([1, 2, 3]))]
+        n_fus = rng.choice(_HW_MENU["n_fus"])
+        hw_list = [HWConfig(
+            n_fus=n_fus,
+            buffer_bytes=rng.choice(_HW_MENU["buffer_bytes"]),
+            dram_gbps=rng.choice(_HW_MENU["dram_gbps"]))
+            for _ in range(n_designs)]
+        dn = ({t.name: rng.choice([8, 16]) for t in wl.tensors}
+              if rng.random() < 0.5 else None)
+        return wl, queries, _SP_MENU[name], hw_list, dn
+
+    @pytest.mark.parametrize("objective", ["cycles", "energy", "edp"])
+    def test_stacked_vs_independent(self, objective):
+        from repro.core.mapper_batch import best_mappings_design
+        rng = random.Random({"cycles": 7, "energy": 8, "edp": 9}[objective])
+        for _ in range(6):
+            wl, queries, sps, hw_list, dn = self._case(rng)
+            stacked = best_mappings_design(
+                wl, queries, sps, hw_list,
+                data_nodes_per_tensor_list=[dn] * len(hw_list),
+                objective=objective)
+            assert len(stacked) == len(hw_list)
+            for di, hw in enumerate(hw_list):
+                for eng in ("numpy", "jax"):
+                    solo = best_mappings(wl, queries, sps, hw,
+                                         data_nodes_per_tensor=dn,
+                                         objective=objective, engine=eng)
+                    for qi, (ma, mb) in enumerate(zip(stacked[di], solo)):
+                        _assert_same_mapping(
+                            ma, mb, (wl.name, objective, di, qi, eng))
+
+    def test_cold_and_warm_compile_cache_identical(self):
+        from repro.core.mapper_batch import best_mappings_design
+        from repro.core.perf_model_jax import clear_compile_cache
+        from repro.obs import METRICS
+
+        wl, sps = _WLS["gemm"], _SP_MENU["gemm"]
+        queries = [({"i": 56, "j": 130, "k": 512}, 0.0),
+                   ({"i": 16, "j": 512, "k": 130}, 4096.0)]
+        hw_list = [HWConfig(n_fus=64, buffer_bytes=b, dram_gbps=g)
+                   for b in (64 * 1024, 512 * 1024) for g in (8.0, 64.0)]
+
+        def dump(rows):
+            return [[(m.perf.as_dict(), m.spatial.name, m.dataflow.name)
+                     for m in row] for row in rows]
+
+        def compiles():
+            return METRICS.snapshot()["counters"].get(
+                "mapper_batch.jax_compiles", 0)
+
+        clear_compile_cache()
+        c0 = compiles()
+        cold = dump(best_mappings_design(wl, queries, sps, hw_list))
+        c1 = compiles()
+        warm = dump(best_mappings_design(wl, queries, sps, hw_list))
+        c2 = compiles()
+        assert cold == warm
+        assert c1 - c0 >= 1, "cold dispatch must have compiled"
+        assert c2 == c1, "warm dispatch must not recompile"
+
+    def test_design_group_contract(self):
+        """One design group = one FU count (candidate enumeration depends
+        on the design only through n_fus); mixed groups are a caller bug."""
+        from repro.core.mapper_batch import best_mappings_design
+        wl, sps = _WLS["gemm"], _SP_MENU["gemm"]
+        q = [({"i": 16, "j": 16, "k": 16}, 0.0)]
+        with pytest.raises(AssertionError):
+            best_mappings_design(wl, q, sps, [HWConfig(n_fus=64),
+                                              HWConfig(n_fus=256)])
+        with pytest.raises(AssertionError):
+            best_mappings_design(wl, q, sps, [])
+
+
 class TestCacheCrossEngine:
     """dse/cache.py engine invariance: keys carry no engine field, so a
     cache populated by one engine must serve every other engine."""
@@ -230,7 +316,7 @@ class TestCacheCrossEngine:
         from repro.dse.space import SPACES
 
         zoo = load_zoo(["gemma_7b"], seq=64, reduced=True)
-        points = SPACES["tiny"].enumerate()
+        points = list(SPACES["tiny"].enumerate())
 
         def frontier(engine, path):
             cache = MappingCache(path)

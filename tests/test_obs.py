@@ -181,7 +181,7 @@ class TestWorkerPoolMerge:
         r1, spans1, metrics1 = _tiny_sweep(workers=1)
         drain_events()
         r4, spans4, metrics4 = _tiny_sweep(workers=4)
-        n = len(SPACES["tiny"].enumerate())
+        n = len(list(SPACES["tiny"].enumerate()))
         assert spans1 == spans4
         assert spans1["dse.evaluate"] == n
         assert spans1["dse.exhaustive_search"] == 1

@@ -25,7 +25,7 @@ from repro.dse.space import DesignPoint
 from repro.dse.supervisor import failure_stub
 from repro.obs import METRICS
 
-POINTS = SPACES["tiny"].enumerate()
+POINTS = list(SPACES["tiny"].enumerate())
 
 
 @pytest.fixture(scope="module")
